@@ -1,0 +1,43 @@
+"""Kernel-vs-oracle timing + validation sweep (supports §Perf iteration log).
+
+Times the Pallas kernel in interpret mode (correctness harness — NOT a perf
+number; TPU perf is the roofline projection) and validates it against the
+oracle across formats and block sizes.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bscsr
+from repro.kernels import ops
+
+
+def run(verbose: bool = True):
+    csr = bscsr.synthetic_embedding_csr(2000, 256, 16, "gamma", 1)
+    x = np.random.default_rng(0).standard_normal(256).astype(np.float32)
+    t0 = time.perf_counter()
+    checked = 0
+    for fmt in ("F32", "BF16", "Q7"):
+        for block in (64, 256):
+            packed = ops.pack_partitions(csr, 4, block, fmt)
+            kv, kr = ops.topk_spmv_blocked(jnp.asarray(x), packed, 16, k=8)
+            rv, rr = ops.topk_spmv_reference(jnp.asarray(x), packed, 16, k=8)
+            np.testing.assert_allclose(np.asarray(kv), np.asarray(rv),
+                                       rtol=1e-5, atol=1e-5)
+            checked += 1
+            if verbose:
+                print(f"kernel=={'oracle':6s} fmt={fmt:5s} B={block:4d} "
+                      f"bytes/nnz={packed.bytes_per_nnz:.2f} OK")
+    dt = time.perf_counter() - t0
+    return {
+        "name": "kernel_validation",
+        "us_per_call": dt / checked * 1e6,
+        "derived": f"{checked}_configs_allclose",
+    }
+
+
+if __name__ == "__main__":
+    run()

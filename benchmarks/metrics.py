@@ -1,0 +1,40 @@
+"""Ranking metrics used by the paper's accuracy analysis (§V-D, Fig. 7)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def precision_at_k(approx_ids, exact_ids, k: int) -> float:
+    """Set overlap of the top-k (the paper's Precision: order-insensitive)."""
+    return len(set(approx_ids[:k].tolist()) & set(exact_ids[:k].tolist())) / k
+
+
+def kendall_tau(approx_ids, exact_ids, k: int) -> float:
+    """Kendall's tau-b between the two rankings over the union of items.
+
+    Items missing from a ranking are placed at rank k (ties broken jointly).
+    """
+    a = {int(v): i for i, v in enumerate(approx_ids[:k])}
+    e = {int(v): i for i, v in enumerate(exact_ids[:k])}
+    items = sorted(set(a) | set(e))
+    ra = np.array([a.get(i, k) for i in items], float)
+    re = np.array([e.get(i, k) for i in items], float)
+    n = len(items)
+    conc = disc = 0
+    for i in range(n):
+        for j in range(i + 1, n):
+            s = (ra[i] - ra[j]) * (re[i] - re[j])
+            conc += s > 0
+            disc += s < 0
+    denom = conc + disc
+    return (conc - disc) / denom if denom else 1.0
+
+
+def ndcg_at_k(approx_ids, exact_ids, exact_scores, k: int) -> float:
+    """NDCG with graded relevance = exact score rank (standard RecSys form)."""
+    rel = {int(v): float(k - i) for i, v in enumerate(exact_ids[:k])}
+    gains = np.array([rel.get(int(v), 0.0) for v in approx_ids[:k]])
+    discounts = 1.0 / np.log2(np.arange(2, k + 2))
+    dcg = float((gains * discounts).sum())
+    ideal = float((np.array([k - i for i in range(k)]) * discounts).sum())
+    return dcg / ideal if ideal else 1.0

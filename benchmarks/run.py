@@ -1,0 +1,32 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (plus verbose detail per benchmark).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (
+        fig5_throughput,
+        fig6_roofline,
+        fig7_accuracy,
+        kernel_validation,
+        table1_precision,
+        table2_designs,
+    )
+
+    mods = [table1_precision, table2_designs, fig5_throughput, fig6_roofline,
+            fig7_accuracy, kernel_validation]
+    rows = []
+    for mod in mods:
+        print(f"\n=== {mod.__name__.split('.')[-1]} ===")
+        rows.append(mod.run(verbose=True))
+    print("\nname,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == '__main__':
+    main()

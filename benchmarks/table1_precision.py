@@ -1,0 +1,50 @@
+"""Paper Table I: expected Top-K precision vs number of partitions.
+
+Reproduces the grid (N in {1e6, 1e7}) x (c in {16, 28, 32}) x
+(K in {8,16,32,50,75,100}) with both the closed form (Eq. 1) and the paper's
+1000-trial Monte Carlo, and reports the max deviation from the published
+values.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.precision_model import expected_precision, monte_carlo_precision
+
+PAPER_TABLE_I = {
+    (10**6, 16): [1, 1, 0.999, 0.998, 0.983, 0.942],
+    (10**6, 28): [1, 1, 1, 0.999, 0.999, 0.996],
+    (10**6, 32): [1, 1, 1, 0.999, 0.999, 0.997],
+    (10**7, 16): [1, 1, 1, 0.999, 0.986, 0.947],
+    (10**7, 28): [1, 1, 1, 0.999, 0.999, 0.995],
+    (10**7, 32): [1, 1, 1, 0.999, 0.998, 0.998],
+}
+KS = [8, 16, 32, 50, 75, 100]
+
+
+def run(verbose: bool = True):
+    t0 = time.perf_counter()
+    max_dev = 0.0
+    rows = []
+    for (n, c), paper in PAPER_TABLE_I.items():
+        closed = [expected_precision(n, c, 8, k) for k in KS]
+        mc = [monte_carlo_precision(n, c, 8, k, trials=1000, seed=0) for k in KS]
+        for p, cl in zip(paper, closed):
+            max_dev = max(max_dev, abs(p - cl))
+        rows.append(((n, c), closed, mc, paper))
+        if verbose:
+            print(f"N={n:.0e} c={c:2d} closed="
+                  f"{[round(v, 3) for v in closed]}")
+            print(f"           paper ={paper}")
+    dt = time.perf_counter() - t0
+    if verbose:
+        print(f"max |closed - paper| = {max_dev:.3f}")
+    return {
+        "name": "table1_precision",
+        "us_per_call": dt / len(PAPER_TABLE_I) * 1e6,
+        "derived": f"max_dev_vs_paper={max_dev:.4f}",
+    }
+
+
+if __name__ == "__main__":
+    run()

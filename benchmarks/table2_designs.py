@@ -1,0 +1,76 @@
+"""Paper Table II analogue: the design-space sweep, TPU resources.
+
+The FPGA table reports LUT/FF/BRAM/URAM/DSP/clock per bit-width.  The TPU
+analogues of those resources are: packet capacity B (nnz per fixed-size
+transaction), bytes moved per nnz, operational intensity, VMEM working set
+per core, and the projected per-chip GNNZ/s at HBM roofline
+(819 GB/s / bytes-per-nnz).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.bscsr import (
+    coo_bytes_per_nnz,
+    fpga_packet_capacity,
+    stream_bytes_per_nnz,
+)
+from repro.core.quantization import FORMATS
+from repro.launch.analysis import HBM_BW
+
+# (name, value bits on FPGA, our TPU storage format)
+DESIGNS = [
+    ("20 bits (Q1.19)", 20, "Q7"),    # closest narrow fixed point on TPU
+    ("25 bits (Q1.24)", 25, "Q15"),
+    ("32 bits (Q1.31)", 32, "Q15"),
+    ("32 bits float", 32, "F32"),
+    ("bf16 (TPU-native)", 16, "BF16"),
+]
+
+
+def vmem_working_set(block_size: int, fmt_name: str, m: int = 512,
+                     packets_per_step: int = 2, k: int = 8) -> int:
+    """Bytes of VMEM a core needs: x + one packet tile group + scratch."""
+    fmt = FORMATS[fmt_name]
+    x_bytes = m * 4
+    tb = packets_per_step * block_size
+    packet = tb * (fmt.bytes_per_value + 2 + 1 / 8)
+    scratch = k * 8 + (tb + 1) * 4 * 3  # topk + segment intermediates
+    return int(x_bytes + 2 * packet + scratch)  # x2: double buffering
+
+
+def run(verbose: bool = True):
+    t0 = time.perf_counter()
+    rows = []
+    for name, bits, fmt in DESIGNS:
+        b_fpga = fpga_packet_capacity(m=1024, value_bits=bits)
+        bpn = stream_bytes_per_nnz(fmt, n_cols=512, block_size=256)
+        gnnz = HBM_BW / bpn / 1e9
+        vmem = vmem_working_set(256, fmt)
+        rows.append((name, b_fpga, fmt, bpn, gnnz, vmem))
+        if verbose:
+            print(f"{name:20s} B_fpga={b_fpga:3d}  tpu_fmt={fmt:5s} "
+                  f"bytes/nnz={bpn:5.2f}  proj={gnnz:6.1f} GNNZ/s/chip "
+                  f"VMEM/core={vmem/1024:.1f} KiB")
+    if verbose:
+        print(f"{'naive COO':20s} B_fpga=  5  tpu_fmt=COO    "
+              f"bytes/nnz={coo_bytes_per_nnz():5.2f}  "
+              f"proj={HBM_BW / coo_bytes_per_nnz() / 1e9:6.1f} GNNZ/s/chip")
+        # beyond-paper: multi-query batching amortizes the stream over Q
+        for q in (4, 16, 64):
+            bpn_q = stream_bytes_per_nnz("BF16", 512) / q
+            print(f"{'bf16 multi-query Q=%-3d' % q:20s} "
+                  f"eff bytes/nnz/query={bpn_q:5.2f}  "
+                  f"proj={HBM_BW / bpn_q / 1e9 / 1000:6.1f} TNNZ/s/chip "
+                  f"(query-throughput)")
+    dt = time.perf_counter() - t0
+    best = max(rows, key=lambda r: r[4])
+    return {
+        "name": "table2_designs",
+        "us_per_call": dt / len(DESIGNS) * 1e6,
+        "derived": f"best={best[2]}@{best[4]:.0f}GNNZ/s_per_chip",
+    }
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""The paper's end application as a service: batched queries, multi-query
+kernel (beyond-paper), and the mesh-distributed query path.
+
+    PYTHONPATH=src python examples/similarity_service.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as core
+from repro.kernels import ops
+from repro.kernels.bscsr_topk_spmv import bscsr_topk_spmv_multiquery
+
+
+def main():
+    rng = np.random.default_rng(0)
+    csr = core.synthetic_embedding_csr(20_000, 256, 16, "gamma", seed=2)
+    cfg = core.TopKSpMVConfig(big_k=32, k=8, num_partitions=8, block_size=128,
+                              value_format="BF16")
+    index = core.build_index(csr, cfg)
+    packed = index.packed
+    queries = rng.standard_normal((8, 256)).astype(np.float32)
+
+    # --- multi-query kernel: 8 queries, ONE pass over the stream ---
+    max_rows = int(max(packed.plan.rows_per_partition))
+    t0 = time.perf_counter()
+    lv, lr = bscsr_topk_spmv_multiquery(
+        jnp.asarray(queries), jnp.asarray(packed.vals),
+        jnp.asarray(packed.cols), jnp.asarray(packed.flags),
+        k=cfg.k, n_rows=max_rows, fmt_name="BF16",
+    )
+    results = [
+        ops.finalize_candidates(
+            lv[:, q], lr[:, q], jnp.asarray(packed.row_starts),
+            jnp.asarray(packed.rows_per_partition), cfg.big_k, csr.shape[0])
+        for q in range(queries.shape[0])
+    ]
+    dt = time.perf_counter() - t0
+    print(f"multi-query kernel: 8 queries in {dt:.2f}s (one stream pass; "
+          f"effective {packed.bytes_per_nnz / 8:.2f} B/nnz/query vs "
+          f"{packed.bytes_per_nnz:.2f} single-query)")
+    for q in (0, 7):
+        ev, er = core.topk_spmv_exact(csr, queries[q], cfg.big_k)
+        ar = np.asarray(results[q][1])
+        print(f"  q{q}: precision@{cfg.big_k} = "
+              f"{len(set(ar.tolist()) & set(er.tolist())) / cfg.big_k:.3f}")
+
+    # --- mesh-distributed path (1 host device here; 256 chips in dryrun) ---
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    fn, arrays = core.distributed_topk_spmv_fn(index, mesh)
+    v, r = fn(jnp.asarray(queries[0]), *arrays)
+    print(f"\ndistributed query on mesh {dict(mesh.shape)}: "
+          f"top-3 rows {np.asarray(r[:3])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: approximate Top-K SpMV embedding similarity, reproduced on TPU in JAX."""
+__version__ = "1.0.0"

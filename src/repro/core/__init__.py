@@ -1,0 +1,26 @@
+"""Core contribution: partitioned approximate Top-K SpMV over BS-CSR streams."""
+from repro.core.bscsr import (
+    BSCSRMatrix,
+    CSRMatrix,
+    encode_bscsr,
+    decode_bscsr,
+    synthetic_embedding_csr,
+    sparsify_topm,
+)
+from repro.core.partition import PartitionPlan, merge_topk
+from repro.core.precision_model import (
+    expected_precision,
+    expected_precision_avg,
+    monte_carlo_precision,
+    min_partitions_for_precision,
+)
+from repro.core.quantization import FORMATS, ValueFormat
+from repro.core.similarity import SparseEmbeddingIndex
+from repro.core.topk_spmv import (
+    TopKSpMVConfig,
+    TopKSpMVIndex,
+    build_index,
+    topk_spmv,
+    topk_spmv_exact,
+    distributed_topk_spmv_fn,
+)

@@ -1,0 +1,294 @@
+"""Block-Streaming CSR (BS-CSR) — the paper's §III-B layout, adapted to TPU.
+
+The FPGA original packs ``B`` non-zeros plus packet-local metadata into one
+512-bit HBM transaction: reduced-precision ``idx``/``val``, a packet-relative
+``ptr`` of ceil(log2 B)-bit counters and a single ``new_row`` carry bit.  The
+packet is an *independent mini-CSR*: global row ids are never stored, they are
+recovered by streaming.
+
+TPU adaptation (DESIGN.md §2): the HBM<->VMEM transfer granule is a tile, so a
+*tile-packet* holds ``B`` non-zeros as three parallel, tile-aligned streams:
+
+  vals   (P, B)        float32 | bfloat16 | int16/int8 Q-format   (paper: val, V bits)
+  cols   (P, B)        int32 | int16                              (paper: idx, 10 bits)
+  flags  (P, B // 32)  int32 bit-pack, bit i set <=> nnz i starts a new row
+                                                                  (paper: ptr + new_row)
+
+Flag semantics: the running row id of nnz ``t`` in the stream is
+``popcount(flags[:t+1]) - 1``.  Bit 0 of a packet is the inverse of the paper's
+``new_row`` continuation bit.  Rows with zero stored entries receive one
+placeholder (col 0, val 0) nnz so the row counter stays aligned (paper §III-B:
+"missing rows are handled with placeholder 0 values").  One trailing sentinel
+row-start closes the final real row; sentinel candidates are masked at merge
+time by ``row_id >= n_rows``.
+
+Like the original, the layout is *oblivious to the row-density distribution*:
+throughput depends only on nnz, never on skew.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.quantization import FORMATS, ValueFormat, quantize
+
+FLAG_WORD_BITS = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class CSRMatrix:
+    """Plain host-side CSR (scipy is unavailable offline; this is self-contained)."""
+
+    indptr: np.ndarray   # (N+1,) int64
+    indices: np.ndarray  # (nnz,) int32
+    data: np.ndarray     # (nnz,) float32
+    shape: Tuple[int, int]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    def to_dense(self) -> np.ndarray:
+        n, m = self.shape
+        out = np.zeros((n, m), dtype=np.float32)
+        rows = np.repeat(np.arange(n), np.diff(self.indptr))
+        out[rows, self.indices] = self.data
+        return out
+
+    def row_slice(self, start: int, stop: int) -> "CSRMatrix":
+        """Rows [start, stop) as a new CSR — used by the partitioner (§III-A)."""
+        lo, hi = int(self.indptr[start]), int(self.indptr[stop])
+        return CSRMatrix(
+            indptr=(self.indptr[start : stop + 1] - lo).astype(np.int64),
+            indices=self.indices[lo:hi],
+            data=self.data[lo:hi],
+            shape=(stop - start, self.shape[1]),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class BSCSRMatrix:
+    """Tile-packet BS-CSR stream for one partition (one 'core')."""
+
+    vals: np.ndarray          # (P, B) storage dtype
+    cols: np.ndarray          # (P, B) int32/int16
+    flags: np.ndarray         # (P, B // 32) int32 bit-pack (row-start bits)
+    n_rows: int               # real rows (excludes the sentinel row)
+    n_cols: int
+    nnz: int                  # real non-zeros (excludes placeholders/padding)
+    block_size: int           # B
+    value_format: ValueFormat
+
+    @property
+    def num_packets(self) -> int:
+        return int(self.vals.shape[0])
+
+    @property
+    def stream_bytes(self) -> int:
+        return self.vals.nbytes + self.cols.nbytes + self.flags.nbytes
+
+    @property
+    def bytes_per_nnz(self) -> float:
+        return self.stream_bytes / max(self.nnz, 1)
+
+
+def _pack_bits(bits: np.ndarray) -> np.ndarray:
+    """(..., B) bool -> (..., B//32) int32 little-endian bit-pack."""
+    b = bits.shape[-1]
+    assert b % FLAG_WORD_BITS == 0, "block size must be a multiple of 32"
+    words = bits.reshape(*bits.shape[:-1], b // FLAG_WORD_BITS, FLAG_WORD_BITS)
+    weights = (1 << np.arange(FLAG_WORD_BITS, dtype=np.int64))
+    packed = (words.astype(np.int64) * weights).sum(axis=-1)
+    # Keep values in int32 range via wrap (bit 31 becomes the sign bit).
+    return packed.astype(np.uint32).view(np.int32)
+
+
+def unpack_bits(packed: np.ndarray, block_size: int) -> np.ndarray:
+    """(..., B//32) int32 -> (..., B) bool. Host-side inverse (tests/debug)."""
+    w = packed.view(np.uint32).astype(np.uint64)
+    shifts = np.arange(FLAG_WORD_BITS, dtype=np.uint64)
+    bits = (w[..., None] >> shifts) & 1
+    return bits.reshape(*packed.shape[:-1], block_size).astype(bool)
+
+
+def col_index_dtype(n_cols: int) -> np.dtype:
+    """Paper: 'realistic size bounds (idx < 1024) allow much greater coalescing'."""
+    return np.dtype(np.int16) if n_cols <= np.iinfo(np.int16).max else np.dtype(np.int32)
+
+
+def encode_bscsr(
+    csr: CSRMatrix,
+    block_size: int = 256,
+    value_format: ValueFormat | str = "F32",
+    pad_packets_to: Optional[int] = None,
+) -> BSCSRMatrix:
+    """Encode a CSR partition into the BS-CSR tile-packet stream."""
+    fmt = FORMATS[value_format] if isinstance(value_format, str) else value_format
+    n, m = csr.shape
+    row_lens = np.diff(csr.indptr)
+
+    # Insert a placeholder nnz for every empty row so the stream's row counter
+    # stays aligned with real row ids (paper's placeholder-0 rule).
+    if (row_lens == 0).any():
+        out_lens = np.maximum(row_lens, 1)
+        total = int(out_lens.sum())
+        vals = np.zeros(total, dtype=np.float32)
+        cols = np.zeros(total, dtype=np.int64)
+        starts = np.concatenate([[0], np.cumsum(out_lens)])[:-1]
+        src_rows = np.repeat(np.arange(n), row_lens)
+        dst = np.repeat(starts, row_lens) + (
+            np.arange(csr.nnz) - np.repeat(csr.indptr[:-1], row_lens)
+        )
+        vals[dst] = csr.data
+        cols[dst] = csr.indices
+        row_starts = starts
+        total_nnz = total
+    else:
+        vals = csr.data.astype(np.float32)
+        cols = csr.indices.astype(np.int64)
+        row_starts = csr.indptr[:-1]
+        total_nnz = csr.nnz
+
+    # Row-start flags + one sentinel row-start that closes the final real row.
+    flags = np.zeros(total_nnz + 1, dtype=bool)
+    flags[row_starts] = True
+    flags[total_nnz] = True
+    vals = np.concatenate([vals, np.zeros(1, dtype=np.float32)])
+    cols = np.concatenate([cols, np.zeros(1, dtype=np.int64)])
+
+    # Pad to a whole number of packets (padding continues the sentinel row).
+    stream_len = total_nnz + 1
+    num_packets = math.ceil(stream_len / block_size)
+    if pad_packets_to is not None:
+        num_packets = max(num_packets, pad_packets_to)
+    padded = num_packets * block_size
+    pad = padded - stream_len
+    vals = np.concatenate([vals, np.zeros(pad, dtype=np.float32)])
+    cols = np.concatenate([cols, np.zeros(pad, dtype=np.int64)])
+    flags = np.concatenate([flags, np.zeros(pad, dtype=bool)])
+
+    cdtype = col_index_dtype(m)
+    return BSCSRMatrix(
+        vals=quantize(vals, fmt).reshape(num_packets, block_size),
+        cols=cols.astype(cdtype).reshape(num_packets, block_size),
+        flags=_pack_bits(flags.reshape(num_packets, block_size)),
+        n_rows=n,
+        n_cols=m,
+        nnz=csr.nnz,
+        block_size=block_size,
+        value_format=fmt,
+    )
+
+
+def decode_bscsr(bs: BSCSRMatrix) -> CSRMatrix:
+    """Stream -> CSR (host; exercises the row-recovery semantics in tests)."""
+    from repro.core.quantization import dequantize  # local to avoid jnp at import
+
+    flags = unpack_bits(bs.flags, bs.block_size).reshape(-1)
+    vals = np.asarray(dequantize(bs.vals.reshape(-1), bs.value_format))
+    cols = bs.cols.reshape(-1).astype(np.int64)
+    row_ids = np.cumsum(flags) - 1
+    keep = row_ids < bs.n_rows  # drop sentinel + padding
+    vals, cols, row_ids = vals[keep], cols[keep], row_ids[keep]
+    # Drop placeholder zeros that were inserted for empty rows.
+    real = vals != 0.0
+    counts = np.bincount(row_ids[real], minlength=bs.n_rows)
+    indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+    return CSRMatrix(
+        indptr=indptr,
+        indices=cols[real].astype(np.int32),
+        data=vals[real].astype(np.float32),
+        shape=(bs.n_rows, bs.n_cols),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Capacity / operational-intensity model (paper §IV-C packet equation + Fig. 6)
+# ---------------------------------------------------------------------------
+
+def fpga_packet_capacity(m: int, value_bits: int, packet_bits: int = 512) -> int:
+    """The paper's B from  B*(ceil(log2 B) + ceil(log2 M) + V) + 1 = packet_bits."""
+    idx_bits = math.ceil(math.log2(max(m, 2)))
+    best = 1
+    for b in range(1, packet_bits):
+        if b * (math.ceil(math.log2(b)) if b > 1 else 1) >= packet_bits:
+            break
+        used = b * ((math.ceil(math.log2(b)) if b > 1 else 1) + idx_bits + value_bits) + 1
+        if used <= packet_bits:
+            best = b
+    return best
+
+
+def stream_bytes_per_nnz(
+    value_format: ValueFormat | str, n_cols: int, block_size: int = 256
+) -> float:
+    """Exact bytes moved from HBM per non-zero with our tile-packet layout."""
+    fmt = FORMATS[value_format] if isinstance(value_format, str) else value_format
+    col_bytes = col_index_dtype(n_cols).itemsize
+    flag_bytes = 1.0 / 8.0                      # 1 bit per nnz, bit-packed
+    return fmt.bytes_per_value + col_bytes + flag_bytes
+
+
+def coo_bytes_per_nnz(value_bytes: int = 4) -> float:
+    """Naive COO (Fig. 3 baseline): row id + col id + value, 32-bit each."""
+    return 4 + 4 + value_bytes
+
+
+# ---------------------------------------------------------------------------
+# Synthetic matrix generation (paper Table III: Uniform and Gamma(3, 4/3))
+# ---------------------------------------------------------------------------
+
+def synthetic_embedding_csr(
+    n_rows: int,
+    n_cols: int,
+    mean_nnz_per_row: float,
+    distribution: str = "uniform",
+    seed: int = 0,
+    normalize: bool = True,
+) -> CSRMatrix:
+    """Random sparse embedding collection matching the paper's evaluation set."""
+    rng = np.random.default_rng(seed)
+    if distribution == "uniform":
+        lens = rng.integers(1, int(2 * mean_nnz_per_row), size=n_rows)
+    elif distribution == "gamma":
+        # Paper: Gamma(k=3, theta=4/3) scaled to the target mean (left-skewed).
+        raw = rng.gamma(shape=3.0, scale=4.0 / 3.0, size=n_rows)
+        lens = np.maximum(1, np.round(raw * (mean_nnz_per_row / 4.0))).astype(np.int64)
+    else:
+        raise ValueError(f"unknown distribution {distribution!r}")
+    lens = np.minimum(lens, n_cols)
+    nnz = int(lens.sum())
+    indptr = np.concatenate([[0], np.cumsum(lens)]).astype(np.int64)
+    indices = np.empty(nnz, dtype=np.int32)
+    # Vectorized unique-column sampling per row (sort trick).
+    keys = rng.random((n_rows, int(lens.max())))
+    order = np.argsort(keys, axis=1)[:, : int(lens.max())]
+    for i in range(n_rows):  # unavoidable ragged fill; still fast for test sizes
+        indices[indptr[i] : indptr[i + 1]] = np.sort(order[i, : lens[i]])
+    data = rng.standard_normal(nnz).astype(np.float32)
+    if normalize:  # L2-normalize rows -> dot product == cosine similarity
+        sq = np.add.reduceat(data * data, indptr[:-1])
+        norms = np.sqrt(np.maximum(sq, 1e-12))
+        data = data / np.repeat(norms, lens).astype(np.float32)
+    return CSRMatrix(indptr=indptr, indices=indices, data=data, shape=(n_rows, n_cols))
+
+
+def sparsify_topm(dense: np.ndarray, m_keep: int, normalize: bool = True) -> CSRMatrix:
+    """Magnitude-top-m sparsification of dense embeddings (GloVe stand-in, §V)."""
+    n, m = dense.shape
+    keep = np.argsort(-np.abs(dense), axis=1)[:, :m_keep]
+    keep = np.sort(keep, axis=1)
+    data = np.take_along_axis(dense, keep, axis=1).astype(np.float32)
+    if normalize:
+        norms = np.linalg.norm(data, axis=1, keepdims=True)
+        data = data / np.maximum(norms, 1e-12)
+    indptr = (np.arange(n + 1) * m_keep).astype(np.int64)
+    return CSRMatrix(
+        indptr=indptr,
+        indices=keep.reshape(-1).astype(np.int32),
+        data=data.reshape(-1),
+        shape=(n, m),
+    )

@@ -1,0 +1,114 @@
+"""Embedding-similarity service — the paper's end application (§I, Fig. 1).
+
+Matches a dense query embedding against a collection of sparse embeddings and
+returns the K most cosine-similar rows.  Wraps index building (sparsify ->
+partition -> BS-CSR encode -> quantize) and batched querying behind one class.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bscsr as bscsr_lib
+from repro.core import topk_spmv as topk_lib
+
+
+@dataclasses.dataclass
+class SimilaritySearchStats:
+    n_rows: int
+    n_cols: int
+    nnz: int
+    num_partitions: int
+    bytes_per_nnz: float
+    stream_bytes: int
+    expected_precision: float
+
+
+class SparseEmbeddingIndex:
+    """Approximate Top-K cosine-similarity over a sparse embedding collection."""
+
+    def __init__(
+        self,
+        csr: bscsr_lib.CSRMatrix,
+        config: Optional[topk_lib.TopKSpMVConfig] = None,
+    ):
+        self.csr = csr
+        self.config = config or topk_lib.TopKSpMVConfig()
+        self.index = topk_lib.build_index(csr, self.config)
+
+    @classmethod
+    def from_dense(
+        cls,
+        embeddings: np.ndarray,
+        nnz_per_row: int = 32,
+        config: Optional[topk_lib.TopKSpMVConfig] = None,
+    ) -> "SparseEmbeddingIndex":
+        """Sparsify dense embeddings (magnitude top-m) and index them."""
+        csr = bscsr_lib.sparsify_topm(embeddings, nnz_per_row)
+        return cls(csr, config)
+
+    def query(
+        self, x: np.ndarray, use_kernel: bool = True
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Top-K (scores, row ids) for one dense query embedding."""
+        v, r = topk_lib.topk_spmv(
+            self.index, jnp.asarray(x, jnp.float32), use_kernel=use_kernel
+        )
+        return np.asarray(v), np.asarray(r)
+
+    def query_batch(
+        self, xs: np.ndarray, use_kernel: bool = False
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Batched queries.
+
+        With ``use_kernel`` the multi-query Pallas kernel answers all Q
+        queries in ONE pass over the stream (per-query bytes/nnz divided by
+        Q — the beyond-paper optimization, EXPERIMENTS.md §Perf C4); the
+        default reference path stays fast under jit on CPU.
+        """
+        if use_kernel:
+            from repro.kernels import ops as kernel_ops
+            from repro.kernels.bscsr_topk_spmv import bscsr_topk_spmv_multiquery
+
+            packed = self.index.packed
+            cfg = self.config
+            max_rows = int(max(packed.plan.rows_per_partition))
+            lv, lr = bscsr_topk_spmv_multiquery(
+                jnp.asarray(xs, jnp.float32),
+                jnp.asarray(packed.vals), jnp.asarray(packed.cols),
+                jnp.asarray(packed.flags),
+                k=cfg.k, n_rows=max_rows,
+                packets_per_step=cfg.packets_per_step,
+                fmt_name=packed.value_format.name,
+                interpret=cfg.resolve_interpret(),
+            )
+            outs = [
+                kernel_ops.finalize_candidates(
+                    lv[:, q], lr[:, q],
+                    jnp.asarray(packed.row_starts),
+                    jnp.asarray(packed.rows_per_partition),
+                    cfg.big_k, packed.plan.n_rows)
+                for q in range(xs.shape[0])
+            ]
+            return (np.stack([np.asarray(o[0]) for o in outs]),
+                    np.stack([np.asarray(o[1]) for o in outs]))
+        outs = [self.query(x, use_kernel=False) for x in xs]
+        return np.stack([o[0] for o in outs]), np.stack([o[1] for o in outs])
+
+    def query_exact(self, x: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        return topk_lib.topk_spmv_exact(self.csr, x, self.config.big_k)
+
+    def stats(self) -> SimilaritySearchStats:
+        packed = self.index.packed
+        return SimilaritySearchStats(
+            n_rows=self.csr.shape[0],
+            n_cols=self.csr.shape[1],
+            nnz=self.csr.nnz,
+            num_partitions=packed.num_cores,
+            bytes_per_nnz=packed.bytes_per_nnz,
+            stream_bytes=packed.stream_bytes,
+            expected_precision=self.index.expected_precision,
+        )

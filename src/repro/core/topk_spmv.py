@@ -1,0 +1,184 @@
+"""High-level Top-K SpMV API: exact / approximate / mesh-distributed.
+
+Distribution model (DESIGN.md §2): the paper's c cores = (devices on the mesh
+"data" axis) x (sub-partitions per device).  Each device streams its local
+BS-CSR partitions through the Pallas kernel; only the c*k candidate (value,
+row) pairs cross ICI in one small all-gather before the final merge — the
+paper's "no output write-back" argument, restated as "no large collective".
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import bscsr as bscsr_lib
+from repro.core.precision_model import expected_precision, min_partitions_for_precision
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref as ref_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKSpMVConfig:
+    """User-facing knobs; mirrors the paper's design space (Table II)."""
+
+    big_k: int = 100               # K
+    k: int = 8                     # per-core scratchpad size (paper: 8)
+    num_partitions: Optional[int] = None   # c; None -> auto from precision target
+    precision_target: float = 0.99
+    block_size: int = 256          # B (nnz per tile-packet)
+    value_format: str = "F32"      # F32 | BF16 | Q15 | Q7
+    packets_per_step: int = 2      # T
+    gather_mode: str = "take"      # take | onehot
+    interpret: Optional[bool] = None  # None -> interpret unless on real TPU
+
+    def resolve_partitions(self, n_rows: int) -> int:
+        if self.num_partitions is not None:
+            return self.num_partitions
+        c = min_partitions_for_precision(
+            n_rows, self.k, self.big_k, self.precision_target
+        )
+        return max(c, -(-self.big_k // self.k))
+
+    def resolve_interpret(self) -> bool:
+        if self.interpret is not None:
+            return self.interpret
+        return jax.default_backend() != "tpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKSpMVIndex:
+    """An immutable, queryable packed index over one embedding collection."""
+
+    packed: kernel_ops.PackedPartitions
+    config: TopKSpMVConfig
+
+    @property
+    def n_rows(self) -> int:
+        return self.packed.plan.n_rows
+
+    @property
+    def expected_precision(self) -> float:
+        return expected_precision(
+            self.n_rows, self.packed.num_cores, self.config.k, self.config.big_k
+        )
+
+
+def build_index(csr: bscsr_lib.CSRMatrix, config: TopKSpMVConfig) -> TopKSpMVIndex:
+    c = config.resolve_partitions(csr.shape[0])
+    packed = kernel_ops.pack_partitions(
+        csr,
+        num_partitions=c,
+        block_size=config.block_size,
+        value_format=config.value_format,
+        packets_multiple=config.packets_per_step,
+    )
+    return TopKSpMVIndex(packed=packed, config=config)
+
+
+def topk_spmv(
+    index: TopKSpMVIndex, x: jnp.ndarray, use_kernel: bool = True
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-device approximate Top-K query."""
+    cfg = index.config
+    if use_kernel:
+        return kernel_ops.topk_spmv_blocked(
+            x,
+            index.packed,
+            big_k=cfg.big_k,
+            k=cfg.k,
+            packets_per_step=cfg.packets_per_step,
+            gather_mode=cfg.gather_mode,
+            interpret=cfg.resolve_interpret(),
+        )
+    return kernel_ops.topk_spmv_reference(x, index.packed, big_k=cfg.big_k, k=cfg.k)
+
+
+def topk_spmv_exact(
+    csr: bscsr_lib.CSRMatrix, x: jnp.ndarray, big_k: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact CSR Top-K on host — ground truth for accuracy studies."""
+    v, r = ref_lib.csr_topk_numpy(
+        csr.indptr, csr.indices, csr.data, np.asarray(x, np.float32), big_k
+    )
+    return v, r
+
+
+# ---------------------------------------------------------------------------
+# Mesh-distributed query
+# ---------------------------------------------------------------------------
+
+def distributed_topk_spmv_fn(
+    index: TopKSpMVIndex, mesh: Mesh, shard_axis="data"
+):
+    """Build a jitted query fn with the index sharded core-wise over ``mesh``.
+
+    Returns (fn, device_arrays): arrays are placed with the core dim sharded
+    over ``shard_axis`` (one group of cores per device = one FPGA per HBM
+    stack, scaled out).  ``fn(x, *device_arrays) -> (topk_vals, topk_rows)``.
+    ``shard_axis`` may be a tuple of mesh axes (e.g. ("pod", "data")).
+    """
+    cfg = index.config
+    packed = index.packed
+    axes = (shard_axis,) if isinstance(shard_axis, str) else tuple(shard_axis)
+    n_dev = 1
+    for a in axes:
+        n_dev *= mesh.shape[a]
+    shard_axis = axes if len(axes) > 1 else axes[0]
+    if packed.num_cores % n_dev != 0:
+        raise ValueError(
+            f"num_partitions ({packed.num_cores}) must be a multiple of the "
+            f"mesh axis {shard_axis!r} size ({n_dev})"
+        )
+    core_sharded = NamedSharding(mesh, P(shard_axis))
+    replicated = NamedSharding(mesh, P())
+
+    device_arrays = tuple(
+        jax.device_put(jnp.asarray(a), core_sharded)
+        for a in (packed.vals, packed.cols, packed.flags)
+    )
+    row_starts = jax.device_put(jnp.asarray(packed.row_starts), core_sharded)
+    rows_per = jax.device_put(jnp.asarray(packed.rows_per_partition), core_sharded)
+    max_rows = int(max(packed.plan.rows_per_partition))
+    interpret = cfg.resolve_interpret()
+
+    def _local(x, vals, cols, flags):
+        from repro.kernels.bscsr_topk_spmv import bscsr_topk_spmv
+
+        return bscsr_topk_spmv(
+            x,
+            vals,
+            cols,
+            flags,
+            k=cfg.k,
+            n_rows=max_rows,
+            packets_per_step=cfg.packets_per_step,
+            fmt_name=packed.value_format.name,
+            gather_mode=cfg.gather_mode,
+            interpret=interpret,
+        )
+
+    @partial(
+        jax.jit,
+        in_shardings=(replicated, core_sharded, core_sharded, core_sharded),
+        out_shardings=(replicated, replicated),
+    )
+    def query(x, vals, cols, flags):
+        lv, lr = jax.shard_map(
+            _local,
+            mesh=mesh,
+            in_specs=(P(), P(shard_axis), P(shard_axis), P(shard_axis)),
+            out_specs=(P(shard_axis), P(shard_axis)),
+            check_vma=False,  # pallas_call outputs carry no vma info
+        )(x, vals, cols, flags)
+        # c*k candidates: tiny; XLA inserts one small all-gather for the merge.
+        return kernel_ops.finalize_candidates(
+            lv, lr, row_starts, rows_per, cfg.big_k, packed.plan.n_rows
+        )
+
+    return query, device_arrays

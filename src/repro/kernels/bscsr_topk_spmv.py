@@ -1,0 +1,326 @@
+"""Pallas TPU kernel for multi-core BS-CSR Top-K SpMV (paper §IV, Alg. 1).
+
+Grid = (cores, steps): grid dim 0 is the paper's "core" (one row-partition per
+core, iterated major), dim 1 streams that core's tile-packets in order — the
+TPU analogue of one HBM channel feeding one core in max-length bursts.  All
+per-core state lives in on-chip scratch, exactly mirroring the FPGA design:
+
+  stage 1  load packet tile, gather x from VMEM (URAM analogue), multiply
+  stage 2  row-aggregate within the tile (one-hot segment-sum on the MXU —
+           the TPU-idiomatic segmented reduce; the FPGA used an unrolled
+           adder chain over the packet)
+  stage 3  cross-packet carry bookkeeping (current row id + partial sum in
+           SMEM — the paper's ``new_row`` / ``last_packet_output``)
+  stage 4  top-k scratchpad update (k-pass vectorized max-extract in VMEM —
+           replaces the FPGA argmin RAW chain, which would serialize on TPU)
+
+The kernel never writes row scores to HBM: per core only k (value, row) pairs
+leave the chip, which is the paper's key bandwidth argument (§III-A).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quantization import FORMATS, ValueFormat
+
+NEG_INF = float(np.finfo(np.float32).min)
+FLAG_WORD_BITS = 32
+
+
+def _unpack_flags_tile(words: jnp.ndarray, tb: int) -> jnp.ndarray:
+    """(T*B/32,) int32 words -> (T*B,) int32 {0,1} row-start bits."""
+    w = words.reshape(-1).astype(jnp.uint32)
+    shifts = jnp.arange(FLAG_WORD_BITS, dtype=jnp.uint32)
+    bits = (w[:, None] >> shifts[None, :]) & jnp.uint32(1)
+    return bits.reshape(tb).astype(jnp.int32)
+
+
+def _topk_spmv_kernel(
+    x_ref,            # (M,) f32                      VMEM (URAM analogue)
+    vals_ref,         # (1, T, B) storage dtype       VMEM tile-packet block
+    cols_ref,         # (1, T, B) int16/int32
+    flags_ref,        # (1, T, B//32) int32
+    topv_ref,         # out (1, k) f32
+    topr_ref,         # out (1, k) int32
+    acc_v,            # scratch VMEM (k,) f32         top-k value scratchpad
+    acc_r,            # scratch VMEM (k,) i32         top-k row scratchpad
+    carry_row,        # scratch SMEM (1,) i32         current open row id
+    carry_sum,        # scratch SMEM (1,) f32         partial sum of open row
+    *,
+    k: int,
+    n_rows: int,
+    num_steps: int,
+    fmt: ValueFormat,
+    gather_mode: str,
+):
+    step = pl.program_id(1)
+
+    # -- per-core reset (each grid-dim-0 core owns an independent partition) --
+    @pl.when(step == 0)
+    def _init():
+        acc_v[...] = jnp.full((k,), NEG_INF, jnp.float32)
+        acc_r[...] = jnp.full((k,), n_rows, jnp.int32)
+        carry_row[0] = -1
+        carry_sum[0] = 0.0
+
+    tb = vals_ref.shape[1] * vals_ref.shape[2]
+
+    # ---- stage 1: load packet, dequantize, gather x, multiply ----
+    v = vals_ref[...].reshape(tb)
+    if fmt.is_fixed_point:
+        v = v.astype(jnp.float32) * jnp.float32(fmt.scale)
+    else:
+        v = v.astype(jnp.float32)
+    c = cols_ref[...].reshape(tb).astype(jnp.int32)
+    x = x_ref[...].astype(jnp.float32)
+    if gather_mode == "onehot":
+        # MXU-gather: one-hot(cols) @ x. Trades FLOPs for gather ports.
+        sel = (c[:, None] == jnp.arange(x.shape[0], dtype=jnp.int32)[None, :])
+        xv = jnp.dot(sel.astype(jnp.float32), x, preferred_element_type=jnp.float32)
+    else:
+        xv = jnp.take(x, c)
+    prods = v * xv
+
+    # ---- stage 2: row-aggregate (segmented sum via one-hot matmul) ----
+    f = _unpack_flags_tile(flags_ref[...], tb)
+    seg = jnp.cumsum(f)                         # (tb,) segment id, 0 = carry row
+    s_last = seg[-1]
+    seg_ids = jnp.arange(tb + 1, dtype=jnp.int32)
+    onehot = (seg[:, None] == seg_ids[None, :]).astype(jnp.float32)
+    seg_sums = jnp.dot(prods[None, :], onehot, preferred_element_type=jnp.float32)[0]
+
+    # ---- stage 3: cross-packet carry (paper's new_row / last_packet_output) --
+    row0 = carry_row[0]
+    part = carry_sum[0]
+    cand_v = seg_sums + jnp.where(seg_ids == 0, part, 0.0)
+    cand_r = row0 + seg_ids
+    complete = (seg_ids < s_last) & (cand_r >= 0)  # last segment stays open
+    cand_v = jnp.where(complete, cand_v, NEG_INF)
+    carry_row[0] = row0 + s_last
+    carry_sum[0] = seg_sums[s_last] + jnp.where(s_last == 0, part, 0.0)
+
+    # ---- stage 4: top-k scratchpad update (k-pass masked max-extract) ----
+    pool_v = jnp.concatenate([acc_v[...], cand_v])
+    pool_r = jnp.concatenate([acc_r[...], cand_r.astype(jnp.int32)])
+    new_v = []
+    new_r = []
+    for _ in range(k):  # unrolled; k is small (paper uses k = 8)
+        i = jnp.argmax(pool_v)
+        new_v.append(pool_v[i])
+        new_r.append(pool_r[i])
+        pool_v = pool_v.at[i].set(NEG_INF)
+    acc_v[...] = jnp.stack(new_v)
+    acc_r[...] = jnp.stack(new_r)
+
+    # ---- emit the core's k candidates on its final step ----
+    @pl.when(step == num_steps - 1)
+    def _emit():
+        topv_ref[...] = acc_v[...].reshape(1, k)
+        topr_ref[...] = acc_r[...].reshape(1, k)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "k", "n_rows", "packets_per_step", "fmt_name", "gather_mode", "interpret",
+    ),
+)
+def bscsr_topk_spmv(
+    x: jnp.ndarray,        # (M,) float32 query embedding
+    vals: jnp.ndarray,     # (C, P, B) storage dtype
+    cols: jnp.ndarray,     # (C, P, B) int16/int32
+    flags: jnp.ndarray,    # (C, P, B//32) int32
+    *,
+    k: int,
+    n_rows: int,           # rows per partition (uniform; pad rows if ragged)
+    packets_per_step: int = 2,
+    fmt_name: str = "F32",
+    gather_mode: str = "take",
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Run the multi-core kernel; returns per-core (vals, local rows), (C, k)."""
+    fmt = FORMATS[fmt_name]
+    n_cores, n_packets, block = vals.shape
+    t = packets_per_step
+    assert n_packets % t == 0, "pad packet count to a multiple of packets_per_step"
+    num_steps = n_packets // t
+    w = block // FLAG_WORD_BITS
+
+    kernel = functools.partial(
+        _topk_spmv_kernel,
+        k=k,
+        n_rows=n_rows,
+        num_steps=num_steps,
+        fmt=fmt,
+        gather_mode=gather_mode,
+    )
+    grid = (n_cores, num_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((x.shape[0],), lambda c, i: (0,)),
+            pl.BlockSpec((1, t, block), lambda c, i: (c, i, 0)),
+            pl.BlockSpec((1, t, block), lambda c, i: (c, i, 0)),
+            pl.BlockSpec((1, t, w), lambda c, i: (c, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda c, i: (c, 0)),
+            pl.BlockSpec((1, k), lambda c, i: (c, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_cores, k), jnp.float32),
+            jax.ShapeDtypeStruct((n_cores, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((k,), jnp.float32),
+            pltpu.VMEM((k,), jnp.int32),
+            pltpu.SMEM((1,), jnp.int32),
+            pltpu.SMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, vals, cols, flags)
+
+
+# ---------------------------------------------------------------------------
+# Multi-query variant (beyond-paper): Q queries share one stream pass.
+#
+# The paper's design answers ONE query per pass, so intensity is capped at
+# 2 flop / (bytes-per-nnz).  Batching Q queries amortizes every packet read
+# across Q dot products: intensity scales by Q while staying memory-bound up
+# to Q ~ 500 (v5e balance point 240 flop/B over ~4 B/nnz).  §Perf C.
+# ---------------------------------------------------------------------------
+
+def _topk_spmv_mq_kernel(
+    x_ref,            # (Q, M) f32
+    vals_ref,         # (1, T, B)
+    cols_ref,         # (1, T, B)
+    flags_ref,        # (1, T, B//32)
+    topv_ref,         # out (1, Q, k)
+    topr_ref,         # out (1, Q, k)
+    acc_v,            # scratch VMEM (Q, k) f32
+    acc_r,            # scratch VMEM (Q, k) i32
+    carry_row,        # scratch SMEM (1,) i32
+    carry_sum,        # scratch VMEM (Q,) f32   (per-query open-row partial)
+    *,
+    k: int,
+    n_rows: int,
+    num_steps: int,
+    fmt: ValueFormat,
+):
+    step = pl.program_id(1)
+    nq = x_ref.shape[0]
+
+    @pl.when(step == 0)
+    def _init():
+        acc_v[...] = jnp.full((nq, k), NEG_INF, jnp.float32)
+        acc_r[...] = jnp.full((nq, k), n_rows, jnp.int32)
+        carry_row[0] = -1
+        carry_sum[...] = jnp.zeros((nq,), jnp.float32)
+
+    tb = vals_ref.shape[1] * vals_ref.shape[2]
+    v = vals_ref[...].reshape(tb)
+    if fmt.is_fixed_point:
+        v = v.astype(jnp.float32) * jnp.float32(fmt.scale)
+    else:
+        v = v.astype(jnp.float32)
+    c = cols_ref[...].reshape(tb).astype(jnp.int32)
+    xv = jnp.take(x_ref[...].astype(jnp.float32), c, axis=1)   # (Q, TB)
+    prods = v[None, :] * xv                                    # (Q, TB)
+
+    f = _unpack_flags_tile(flags_ref[...], tb)
+    seg = jnp.cumsum(f)
+    s_last = seg[-1]
+    seg_ids = jnp.arange(tb + 1, dtype=jnp.int32)
+    onehot = (seg[:, None] == seg_ids[None, :]).astype(jnp.float32)
+    seg_sums = jnp.dot(prods, onehot, preferred_element_type=jnp.float32)
+
+    row0 = carry_row[0]
+    part = carry_sum[...]                                      # (Q,)
+    cand_v = seg_sums + jnp.where(seg_ids[None, :] == 0, part[:, None], 0.0)
+    cand_r = row0 + seg_ids
+    complete = (seg_ids < s_last) & (cand_r >= 0)
+    cand_v = jnp.where(complete[None, :], cand_v, NEG_INF)
+    carry_row[0] = row0 + s_last
+    carry_sum[...] = seg_sums[:, s_last] + jnp.where(s_last == 0, part, 0.0)
+
+    pool_v = jnp.concatenate([acc_v[...], cand_v], axis=1)     # (Q, k+S)
+    pool_r = jnp.concatenate(
+        [acc_r[...], jnp.broadcast_to(cand_r, (nq, tb + 1)).astype(jnp.int32)],
+        axis=1,
+    )
+    qs = jnp.arange(nq)
+    new_v, new_r = [], []
+    for _ in range(k):
+        i = jnp.argmax(pool_v, axis=1)                         # (Q,)
+        new_v.append(pool_v[qs, i])
+        new_r.append(pool_r[qs, i])
+        pool_v = pool_v.at[qs, i].set(NEG_INF)
+    acc_v[...] = jnp.stack(new_v, axis=1)
+    acc_r[...] = jnp.stack(new_r, axis=1)
+
+    @pl.when(step == num_steps - 1)
+    def _emit():
+        topv_ref[...] = acc_v[...].reshape(1, nq, k)
+        topr_ref[...] = acc_r[...].reshape(1, nq, k)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "n_rows", "packets_per_step", "fmt_name", "interpret"),
+)
+def bscsr_topk_spmv_multiquery(
+    x: jnp.ndarray,        # (Q, M) float32 query batch
+    vals: jnp.ndarray,     # (C, P, B)
+    cols: jnp.ndarray,
+    flags: jnp.ndarray,
+    *,
+    k: int,
+    n_rows: int,
+    packets_per_step: int = 2,
+    fmt_name: str = "F32",
+    interpret: bool = True,
+):
+    """Multi-query kernel; returns per-core (vals, rows) of shape (C, Q, k)."""
+    fmt = FORMATS[fmt_name]
+    n_cores, n_packets, block = vals.shape
+    nq = x.shape[0]
+    t = packets_per_step
+    assert n_packets % t == 0
+    num_steps = n_packets // t
+    w = block // FLAG_WORD_BITS
+    kernel = functools.partial(
+        _topk_spmv_mq_kernel, k=k, n_rows=n_rows, num_steps=num_steps, fmt=fmt,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n_cores, num_steps),
+        in_specs=[
+            pl.BlockSpec((nq, x.shape[1]), lambda c, i: (0, 0)),
+            pl.BlockSpec((1, t, block), lambda c, i: (c, i, 0)),
+            pl.BlockSpec((1, t, block), lambda c, i: (c, i, 0)),
+            pl.BlockSpec((1, t, w), lambda c, i: (c, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, nq, k), lambda c, i: (c, 0, 0)),
+            pl.BlockSpec((1, nq, k), lambda c, i: (c, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_cores, nq, k), jnp.float32),
+            jax.ShapeDtypeStruct((n_cores, nq, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((nq, k), jnp.float32),
+            pltpu.VMEM((nq, k), jnp.int32),
+            pltpu.SMEM((1,), jnp.int32),
+            pltpu.VMEM((nq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, vals, cols, flags)

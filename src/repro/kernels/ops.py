@@ -1,0 +1,161 @@
+"""Host-side packing + jit'd dispatch around the BS-CSR Top-K SpMV kernel."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bscsr as bscsr_lib
+from repro.core import partition as partition_lib
+from repro.core.quantization import FORMATS, ValueFormat
+from repro.kernels import ref as ref_lib
+from repro.kernels.bscsr_topk_spmv import bscsr_topk_spmv
+
+NEG_INF = ref_lib.NEG_INF
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedPartitions:
+    """All core partitions of one matrix, stacked for the (cores, steps) grid."""
+
+    vals: np.ndarray          # (C, P, B)
+    cols: np.ndarray          # (C, P, B)
+    flags: np.ndarray         # (C, P, B//32)
+    plan: partition_lib.PartitionPlan
+    n_cols: int
+    nnz: int
+    block_size: int
+    value_format: ValueFormat
+
+    @property
+    def num_cores(self) -> int:
+        return int(self.vals.shape[0])
+
+    @property
+    def row_starts(self) -> np.ndarray:
+        return np.asarray(self.plan.row_starts, dtype=np.int32)
+
+    @property
+    def rows_per_partition(self) -> np.ndarray:
+        return np.asarray(self.plan.rows_per_partition, dtype=np.int32)
+
+    @property
+    def stream_bytes(self) -> int:
+        return self.vals.nbytes + self.cols.nbytes + self.flags.nbytes
+
+    @property
+    def bytes_per_nnz(self) -> float:
+        return self.stream_bytes / max(self.nnz, 1)
+
+
+def pack_partitions(
+    csr: bscsr_lib.CSRMatrix,
+    num_partitions: int,
+    block_size: int = 256,
+    value_format: ValueFormat | str = "F32",
+    packets_multiple: int = 2,
+) -> PackedPartitions:
+    """Partition a CSR row-wise (§III-A) and BS-CSR encode each partition."""
+    fmt = FORMATS[value_format] if isinstance(value_format, str) else value_format
+    plan = partition_lib.PartitionPlan.build(csr.shape[0], num_partitions)
+    parts = partition_lib.partition_csr(csr, plan)
+    encoded = [bscsr_lib.encode_bscsr(p, block_size, fmt) for p in parts]
+    max_p = max(e.num_packets for e in encoded)
+    max_p = -(-max_p // packets_multiple) * packets_multiple  # step-align
+    encoded = [
+        bscsr_lib.encode_bscsr(p, block_size, fmt, pad_packets_to=max_p)
+        for p in parts
+    ]
+    return PackedPartitions(
+        vals=np.stack([e.vals for e in encoded]),
+        cols=np.stack([e.cols for e in encoded]),
+        flags=np.stack([e.flags for e in encoded]),
+        plan=plan,
+        n_cols=csr.shape[1],
+        nnz=csr.nnz,
+        block_size=block_size,
+        value_format=fmt,
+    )
+
+
+def finalize_candidates(
+    local_vals: jnp.ndarray,   # (C, k)
+    local_rows: jnp.ndarray,   # (C, k) partition-local row ids
+    row_starts: jnp.ndarray,   # (C,)
+    rows_per_part: jnp.ndarray,  # (C,)
+    big_k: int,
+    n_rows: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mask sentinels, globalize row ids, merge c*k candidates into Top-K."""
+    valid = local_rows < rows_per_part[:, None]
+    global_rows = local_rows + row_starts[:, None]
+    vals = jnp.where(valid, local_vals, NEG_INF)
+    rows = jnp.where(valid, global_rows, n_rows)
+    return partition_lib.merge_topk(vals, rows, big_k, n_rows)
+
+
+def topk_spmv_blocked(
+    x: jnp.ndarray,
+    packed: PackedPartitions,
+    big_k: int,
+    k: int = 8,
+    packets_per_step: int = 2,
+    gather_mode: str = "take",
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-device multi-core approximate Top-K SpMV via the Pallas kernel."""
+    max_rows = int(max(packed.plan.rows_per_partition))
+    lv, lr = bscsr_topk_spmv(
+        jnp.asarray(x, jnp.float32),
+        jnp.asarray(packed.vals),
+        jnp.asarray(packed.cols),
+        jnp.asarray(packed.flags),
+        k=k,
+        n_rows=max_rows,
+        packets_per_step=packets_per_step,
+        fmt_name=packed.value_format.name,
+        gather_mode=gather_mode,
+        interpret=interpret,
+    )
+    return finalize_candidates(
+        lv,
+        lr,
+        jnp.asarray(packed.row_starts),
+        jnp.asarray(packed.rows_per_partition),
+        big_k,
+        packed.plan.n_rows,
+    )
+
+
+def topk_spmv_reference(
+    x: jnp.ndarray,
+    packed: PackedPartitions,
+    big_k: int,
+    k: int = 8,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Same partitioned approximation, evaluated with the pure-jnp oracle."""
+    lv, lr = [], []
+    for c in range(packed.num_cores):
+        rows_c = int(packed.rows_per_partition[c])
+        v, r = ref_lib.bscsr_topk_ref(
+            jnp.asarray(packed.vals[c]),
+            jnp.asarray(packed.cols[c]),
+            jnp.asarray(packed.flags[c]),
+            jnp.asarray(x, jnp.float32),
+            rows_c,
+            k,
+            packed.value_format,
+        )
+        lv.append(v)
+        lr.append(r)
+    return finalize_candidates(
+        jnp.stack(lv),
+        jnp.stack(lr),
+        jnp.asarray(packed.row_starts),
+        jnp.asarray(packed.rows_per_partition),
+        big_k,
+        packed.plan.n_rows,
+    )

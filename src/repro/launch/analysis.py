@@ -1,0 +1,171 @@
+"""Compiled-artifact analysis: cost, memory, and collective-traffic parsing.
+
+The dry-run's "profiler": everything here reads the lowered/compiled HLO, no
+execution.  Collective bytes are parsed from the SPMD-partitioned module text
+and converted to per-device ICI traffic with ring-algorithm factors:
+
+  all-reduce          2 x result bytes          (reduce-scatter + all-gather)
+  all-gather          1 x result bytes          (each device receives ~result)
+  reduce-scatter      group x result bytes      (operand streamed through)
+  all-to-all          1 x result bytes
+  collective-permute  1 x result bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# TPU v5e hardware constants (target platform; DESIGN.md §2)
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link
+
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)  # iota v2 format
+    if m:
+        return int(m.group(2))
+    return 1
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-opcode {count, bytes} from one partitioned HLO module."""
+    out = {op: {"count": 0, "bytes": 0.0} for op in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        m = re.search(
+            r"=\s+(\(?[a-z0-9_]+\[.*?)\s+"
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+            r"collective-permute)(-start|-done)?\(", stripped)
+        if not m:
+            continue
+        if m.group(3) == "-done":  # avoid double counting async pairs
+            continue
+        result_part, op = m.group(1), m.group(2)
+        size = sum(
+            _shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(result_part)
+        )
+        g = _group_size(stripped)
+        factor = {"all-reduce": 2.0, "all-gather": 1.0,
+                  "reduce-scatter": float(max(g, 1)), "all-to-all": 1.0,
+                  "collective-permute": 1.0}[op]
+        out[op]["count"] += 1
+        out[op]["bytes"] += size * factor
+    return out
+
+
+def collective_bytes_total(hlo_text: str) -> float:
+    return sum(v["bytes"] for v in parse_collectives(hlo_text).values())
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """The three per-step roofline terms (seconds) on the target hardware."""
+
+    flops: float              # per-device HLO flops
+    hbm_bytes: float          # per-device bytes accessed
+    coll_bytes: float         # per-device ICI bytes
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float = 0.0  # 6*N*D (or 6*N_active*D) global
+    useful_ratio: float = 0.0  # model_flops / (flops * chips)
+
+    @staticmethod
+    def build(flops, hbm_bytes, coll_bytes, chips, model_flops=0.0):
+        compute_s = flops / PEAK_FLOPS_BF16
+        memory_s = hbm_bytes / HBM_BW
+        collective_s = coll_bytes / ICI_BW
+        terms = {"compute": compute_s, "memory": memory_s,
+                 "collective": collective_s}
+        bn = max(terms, key=terms.get)
+        useful = model_flops / (flops * chips) if flops and chips else 0.0
+        return RooflineTerms(
+            flops=flops, hbm_bytes=hbm_bytes, coll_bytes=coll_bytes,
+            chips=chips, compute_s=compute_s, memory_s=memory_s,
+            collective_s=collective_s, bottleneck=bn,
+            model_flops=model_flops, useful_ratio=useful,
+        )
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def analyze_compiled(compiled, chips: int, model_flops: float = 0.0) -> dict:
+    """Pull cost/memory/collective numbers out of one compiled executable.
+
+    Primary roofline inputs come from the trip-count-aware HLO analyzer
+    (hlo_costs.py) — XLA's own cost_analysis counts scan bodies once and is
+    recorded for reference only.
+    """
+    from repro.launch import hlo_costs
+
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        cost = dict(ca) if ca else {}
+    except Exception as e:  # pragma: no cover
+        cost = {"error": str(e)}
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+                if hasattr(ma, k):
+                    mem[k] = int(getattr(ma, k))
+    except Exception as e:  # pragma: no cover
+        mem = {"error": str(e)}
+    text = compiled.as_text()
+    hc = hlo_costs.analyze(text)
+    terms = RooflineTerms.build(
+        hc["flops"], hc["hbm_bytes"], hc["coll_bytes"], chips, model_flops
+    )
+    # dtype-convert traffic, reported separately: the CPU backend lowers
+    # bf16 dots through f32 upcasts that the TPU fuses into the MXU pipeline
+    convert_s = hc.get("convert_bytes", 0.0) / HBM_BW
+    out = terms.as_dict()
+    out["convert_bytes"] = hc.get("convert_bytes", 0.0)
+    out["memory_s_excl_converts"] = max(out["memory_s"] - convert_s, 0.0)
+    return {
+        "cost_xla_raw": {
+            k: float(v) for k, v in cost.items()
+            if isinstance(v, (int, float)) and k in ("flops", "bytes accessed")
+        },
+        "memory": mem,
+        "collectives": hc["coll_breakdown"],
+        "roofline": out,
+    }

@@ -1,0 +1,292 @@
+"""Trip-count-aware cost analysis over compiled (optimized) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop (lax.scan) body ONCE,
+ignoring trip counts — useless for scan-over-layers models (validated in
+EXPERIMENTS.md §Dry-run methodology).  This module re-derives the roofline
+inputs from the HLO text, trip-count-correctly:
+
+  * FLOPs — every ``dot``: 2 * prod(result dims) * prod(lhs contraction dims)
+    (operand shapes resolved through a per-computation symbol table).
+    Elementwise flops are ignored (<5 % on matmul-dominated models).
+  * HBM bytes — operand + result bytes of every materializing op at fusion
+    granularity (fusion internals move no HBM bytes; GTE/tuple/bitcast/
+    parameter are free).
+  * Collective bytes — ring-model factors: all-reduce 2x, all-gather 1x,
+    reduce-scatter group-x, all-to-all 1x, collective-permute 1x.
+
+Quantities inside while bodies are multiplied by the loop's trip count, read
+from the ``backend_config={"known_trip_count":{"n":...}}`` annotation (with a
+condition-constant fallback), recursively for nested scans.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_OP_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+FREE_OPS = {
+    "get-tuple-element", "tuple", "bitcast", "parameter", "constant",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(dt: str, dims_str: str) -> int:
+    n = 1
+    for d in dims_str.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dt, 4)
+
+
+def _all_shape_bytes(text: str) -> int:
+    return sum(_shape_bytes(dt, d) for dt, d in _SHAPE_RE.findall(text))
+
+
+def _result_part(rhs: str) -> str:
+    """The result-shape segment of an op line (before the opcode token)."""
+    # rhs looks like: 'f32[256,256]{1,0} dot(%a, %b), attrs' or
+    # '(s32[], f32[8]{0}) tuple(...)'
+    m = re.match(r"^(\(?[a-z][^)]*?\)?\{?[\d,]*\}?)\s+([a-z][\w\-]*)\(", rhs)
+    if not m:
+        return ""
+    return m.group(1)
+
+
+def _opcode(rhs: str) -> str:
+    m = re.match(r"^\(?\s*[a-z][^ ]*?\s+([a-z][\w\-]*)\(", rhs)
+    if m:
+        return m.group(1)
+    # tuple-result ops: "(f32[..], f32[..]) opcode(...)"
+    m = re.search(r"\)\s+([a-z][\w\-]*)\(", rhs)
+    return m.group(1) if m else "unknown"
+
+
+def _arg_names(rhs: str) -> List[str]:
+    i = rhs.find("(", rhs.find(" "))
+    # find the arg list of the opcode call: first '(' after the opcode token
+    m = re.search(r"[a-z][\w\-]*\(", rhs)
+    if not m:
+        return []
+    start = m.end() - 1
+    depth = 0
+    for j in range(start, len(rhs)):
+        if rhs[j] == "(":
+            depth += 1
+        elif rhs[j] == ")":
+            depth -= 1
+            if depth == 0:
+                return re.findall(r"%([\w\.\-]+)", rhs[start:j])
+    return []
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    kind: str
+    flops: float = 0.0
+    mem_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    trip: int = 1                      # for while ops
+    callees: Tuple[str, ...] = ()
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_fused: bool
+    ops: List[OpInfo] = dataclasses.field(default_factory=list)
+    shapes: Dict[str, str] = dataclasses.field(default_factory=dict)
+    cond_const: Optional[int] = None
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    return 1
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line:
+            cur = None if line == "}" else cur
+            continue
+        hdr = _COMP_HDR.match(line)
+        if hdr:
+            name = hdr.group(2)
+            cur = Computation(
+                name=name,
+                is_fused=name.startswith("fused_") or name.startswith("wrapped_"),
+            )
+            comps[name] = cur
+            if hdr.group(1):
+                entry = name
+            continue
+        if cur is None:
+            continue
+        mo = _OP_RE.match(line)
+        if not mo:
+            continue
+        op_name, rhs = mo.group(1), mo.group(2)
+        res = _result_part(rhs)
+        cur.shapes[op_name] = res
+        kind = _opcode(rhs)
+
+        if kind == "constant":
+            m = re.search(r"constant\((\d+)\)", rhs)
+            if m:
+                v = int(m.group(1))
+                if cur.cond_const is None or v > cur.cond_const:
+                    cur.cond_const = v
+
+        op = OpInfo(name=op_name, kind=kind)
+
+        if kind == "dot":
+            res_elems = 1
+            for dt, dims in _SHAPE_RE.findall(res):
+                for d in dims.split(","):
+                    if d:
+                        res_elems *= int(d)
+            args = _arg_names(rhs)
+            contract = 1
+            mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
+            if args and mc:
+                lhs_shape = cur.shapes.get(args[0], "")
+                sm = _SHAPE_RE.search(lhs_shape)
+                if sm:
+                    lhs_dims = [int(d) for d in sm.group(2).split(",") if d]
+                    for idx in (int(i) for i in mc.group(1).split(",") if i):
+                        if idx < len(lhs_dims):
+                            contract *= lhs_dims[idx]
+            op.flops = 2.0 * res_elems * contract
+
+        base_kind = kind[:-6] if kind.endswith("-start") else kind
+        if base_kind in COLLECTIVES:
+            res_bytes = _all_shape_bytes(res)
+            factor = {"all-reduce": 2.0, "all-gather": 1.0,
+                      "reduce-scatter": float(max(_group_size(rhs), 1)),
+                      "all-to-all": 1.0, "collective-permute": 1.0}[base_kind]
+            op.kind = base_kind
+            op.coll_bytes = res_bytes * factor
+
+        if kind == "while":
+            mb = re.search(r"body=%?([\w\.\-]+)", rhs)
+            mc2 = re.search(r"condition=%?([\w\.\-]+)", rhs)
+            mt = _TRIP_RE.search(rhs)
+            op.callees = tuple(x.group(1) for x in (mb, mc2) if x)
+            op.trip = int(mt.group(1)) if mt else 0  # 0 -> resolve later
+        else:
+            callees = []
+            for attr in ("calls", "to_apply"):
+                ma = re.search(attr + r"=%?([\w\.\-]+)", rhs)
+                if ma:
+                    callees.append(ma.group(1))
+            op.callees = tuple(callees)
+
+        # memory at fusion granularity: result + operand bytes, with two
+        # traffic-model refinements (documented in EXPERIMENTS.md §Dry-run):
+        #  * slice/gather-rooted ops read only ~result bytes, not the full
+        #    operand (XLA names fusions after their root op);
+        #  * dynamic-update-slice (KV-cache insert) is in-place: traffic is
+        #    ~2x the update slice, not the whole cache.
+        if kind not in FREE_OPS and kind != "while" and not kind.endswith("-done"):
+            res_bytes = _all_shape_bytes(res)
+            lowered_name = op_name.replace("-", "_")
+            if "dynamic_update_slice" in lowered_name:
+                operands = sorted(
+                    (_all_shape_bytes(cur.shapes.get(a, ""))
+                     for a in _arg_names(rhs)),
+                    reverse=True,
+                )
+                op.mem_bytes = 2.0 * sum(operands[1:])  # drop the big buffer
+            elif "slice" in lowered_name or "gather" in lowered_name:
+                op.mem_bytes = 2.0 * res_bytes
+            else:
+                mem = res_bytes
+                for a in _arg_names(rhs):
+                    mem += _all_shape_bytes(cur.shapes.get(a, ""))
+                op.mem_bytes = mem
+
+        cur.ops.append(op)
+    return comps, entry
+
+
+def analyze(text: str) -> Dict[str, float]:
+    comps, entry = parse_hlo(text)
+    zero = {"flops": 0.0, "hbm_bytes": 0.0, "coll_bytes": 0.0,
+            "convert_bytes": 0.0,
+            "coll_breakdown": {c: {"count": 0.0, "bytes": 0.0}
+                               for c in COLLECTIVES}}
+    if entry is None:
+        return zero
+    memo: Dict[str, dict] = {}
+
+    def _merge(dst, src, factor=1.0, mem=True):
+        dst["flops"] += factor * src["flops"]
+        if mem:
+            dst["hbm_bytes"] += factor * src["hbm_bytes"]
+            dst["convert_bytes"] += factor * src["convert_bytes"]
+        dst["coll_bytes"] += factor * src["coll_bytes"]
+        for c in COLLECTIVES:
+            dst["coll_breakdown"][c]["count"] += (
+                factor * src["coll_breakdown"][c]["count"])
+            dst["coll_breakdown"][c]["bytes"] += (
+                factor * src["coll_breakdown"][c]["bytes"])
+
+    def visit(name: str, depth: int = 0) -> dict:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        if comp is None or depth > 64:
+            return {k: (dict(v) if isinstance(v, dict) else v)
+                    for k, v in zero.items()}
+        import copy
+        memo[name] = copy.deepcopy(zero)
+        acc = copy.deepcopy(zero)
+        for op in comp.ops:
+            if op.kind == "while":
+                trips = op.trip
+                if trips == 0 and len(op.callees) == 2:
+                    cond = comps.get(op.callees[1])
+                    trips = max(cond.cond_const or 1, 1) if cond else 1
+                for cn in op.callees:
+                    _merge(acc, visit(cn, depth + 1), factor=trips)
+            else:
+                acc["flops"] += op.flops
+                acc["hbm_bytes"] += op.mem_bytes
+                if op.kind == "convert" or op.name.startswith("convert"):
+                    acc["convert_bytes"] += op.mem_bytes
+                acc["coll_bytes"] += op.coll_bytes
+                if op.kind in COLLECTIVES:
+                    acc["coll_breakdown"][op.kind]["count"] += 1
+                    acc["coll_breakdown"][op.kind]["bytes"] += op.coll_bytes
+                for cn in op.callees:
+                    callee = comps.get(cn)
+                    _merge(acc, visit(cn, depth + 1),
+                           mem=not (callee is not None and callee.is_fused))
+        memo[name] = acc
+        return acc
+
+    return visit(entry)

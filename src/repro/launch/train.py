@@ -1,0 +1,64 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --smoke \
+      --steps 100 --batch 8 --seq 128
+
+On real hardware the same entry point runs the full configs on the production
+mesh (--mesh production|production-multipod); on this CPU container use
+--smoke (reduced config, host mesh).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ALIASES, get_config, smoke_config
+from repro.configs.base import ShapeConfig, TrainConfig
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.train.loop import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--mesh", default="host",
+                    choices=["host", "production", "production-multipod"])
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="model-axis size for --mesh host")
+    ap.add_argument("--step-timeout", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.mesh == "host":
+        mesh = make_host_mesh(model=args.model_parallel)
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh.endswith("multipod"))
+
+    shape = ShapeConfig("cli", "train", args.seq, args.batch)
+    tc = TrainConfig(
+        learning_rate=args.lr,
+        steps=args.steps,
+        microbatches=args.microbatches,
+        grad_dtype=args.grad_dtype,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every,
+        step_timeout_s=args.step_timeout,
+    )
+    out = train(cfg, shape, tc, mesh=mesh)
+    print(f"final loss: {out['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

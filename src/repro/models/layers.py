@@ -1,0 +1,353 @@
+"""Shared neural-net layers: norms, RoPE, GQA attention, MLPs, embeddings.
+
+Conventions
+-----------
+* Params are nested dicts of fp32 arrays; forward casts to ``cfg.dtype``
+  (bf16 by default) for compute, norms/softmax/losses accumulate in fp32.
+* Layer-stacked params carry a leading ``layers`` dim and are consumed by
+  ``jax.lax.scan`` (keeps HLO size and compile time independent of depth).
+* Attention is q-block-chunked (``lax.scan`` over query chunks) so prefill at
+  32k sequence length never materializes an S x S score tensor.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.sharding.rules import constrain
+
+NEG_INF = -1e30
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis: int = 0) -> jnp.ndarray:
+    """LeCun-normal fp32 init (fan-in over ``in_axis``)."""
+    fan_in = shape[in_axis]
+    return (jax.random.normal(key, shape, jnp.float32) / np.sqrt(max(fan_in, 1)))
+
+
+def embed_init(key, shape) -> jnp.ndarray:
+    return jax.random.normal(key, shape, jnp.float32) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, w, b, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, n_heads, head_dim); positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos = jnp.cos(angles)[..., None, :]                # (..., S, 1, d/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, grouped einsum — KV is never materialized per q-head)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, layers: Optional[int] = None) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, g = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 8)
+    lead = () if layers is None else (layers,)
+    p = {
+        "wq": dense_init(ks[0], (*lead, d, h * hd), in_axis=len(lead)),
+        "wk": dense_init(ks[1], (*lead, d, g * hd), in_axis=len(lead)),
+        "wv": dense_init(ks[2], (*lead, d, g * hd), in_axis=len(lead)),
+        "wo": dense_init(ks[3], (*lead, h * hd, d), in_axis=len(lead)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((*lead, h * hd), jnp.float32)
+        p["bk"] = jnp.zeros((*lead, g * hd), jnp.float32)
+        p["bv"] = jnp.zeros((*lead, g * hd), jnp.float32)
+    return p
+
+
+def attention_specs(cfg: ModelConfig, layers: bool) -> dict:
+    lead = ("layers",) if layers else ()
+    s = {
+        "wq": P(*lead, "embed_fsdp", "heads"),
+        "wk": P(*lead, "embed_fsdp", "kv_heads"),
+        "wv": P(*lead, "embed_fsdp", "kv_heads"),
+        "wo": P(*lead, "heads", "embed_fsdp"),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = P(*lead, "heads")
+        s["bk"] = P(*lead, "kv_heads")
+        s["bv"] = P(*lead, "kv_heads")
+    return s
+
+
+def qkv_project(p: dict, x: jnp.ndarray, cfg: ModelConfig, positions: jnp.ndarray):
+    """x: (B,S,D) -> q (B,S,H,hd), k/v (B,S,G,hd), RoPE applied."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    dt = x.dtype
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(b, s, cfg.num_heads, hd)
+    k = k.reshape(b, s, cfg.num_kv_heads, hd)
+    v = v.reshape(b, s, cfg.num_kv_heads, hd)
+    if cfg.rope_theta > 0:  # rope_theta == 0: absolute-position models (whisper)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _grouped_scores(q, k, scale):
+    """q (B,Sq,G,Qg,hd) x k (B,Sk,G,hd) -> (B,G,Qg,Sq,Sk), fp32."""
+    return jnp.einsum(
+        "bsgqd,btgd->bgqst", q, k, preferred_element_type=jnp.float32
+    ) * scale
+
+
+def blockwise_attention(
+    q: jnp.ndarray,            # (B, S, H, hd)
+    k: jnp.ndarray,            # (B, Sk, G, hd)
+    v: jnp.ndarray,            # (B, Sk, G, hd)
+    *,
+    causal: bool,
+    q_offset: int | jnp.ndarray = 0,
+    sliding_window: int = 0,
+    q_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Q-chunked masked attention; peak memory O(q_chunk * Sk) per (b, head).
+
+    Returns (B, S, H, hd).  ``q_offset`` is the absolute position of q[0]
+    (used by cross-packet decode and by prefill continuation).
+    """
+    b, s, h, hd = q.shape
+    sk, g = k.shape[1], k.shape[2]
+    qg = h // g
+    scale = 1.0 / np.sqrt(hd)
+    q = q.reshape(b, s, g, qg, hd)
+
+    q_chunk = min(q_chunk, s)
+    if s % q_chunk != 0:  # fall back to one chunk for ragged sizes
+        q_chunk = s
+    n_chunks = s // q_chunk
+    kpos = jnp.arange(sk)
+
+    @jax.checkpoint  # don't save per-chunk probs for backward (O(S^2) memory)
+    def one_chunk_impl(qc_idx):
+        qc = jax.lax.dynamic_slice_in_dim(q, qc_idx * q_chunk, q_chunk, axis=1)
+        scores = _grouped_scores(qc, k, scale)          # (B,G,Qg,qc,Sk) fp32
+        qpos = q_offset + qc_idx * q_chunk + jnp.arange(q_chunk)
+        mask = jnp.ones((q_chunk, sk), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if sliding_window > 0:
+            mask &= kpos[None, :] > qpos[:, None] - sliding_window
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        return jnp.einsum("bgqst,btgd->bsgqd", probs, v)  # (B,qc,G,Qg,hd)
+
+    def one_chunk(carry, qc_idx):
+        return carry, one_chunk_impl(qc_idx)
+
+    _, outs = jax.lax.scan(one_chunk, None, jnp.arange(n_chunks))
+    # outs: (n_chunks, B, q_chunk, G, Qg, hd) -> (B, S, H, hd)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, g, qg, hd)
+    return out.reshape(b, s, h, hd)
+
+
+def decode_attention(
+    q: jnp.ndarray,            # (B, 1, H, hd)
+    k_cache: jnp.ndarray,      # (B, G, S, hd)  — heads-major cache layout:
+    v_cache: jnp.ndarray,      #   the contraction is layout-native, no
+    valid_len: jnp.ndarray,    #   full-cache transpose per layer (§Perf B3)
+) -> jnp.ndarray:
+    b, _, h, hd = q.shape
+    g = k_cache.shape[1]
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(b, g, h // g, hd)
+    scores = jnp.einsum(
+        "bgqd,bgtd->bgqt", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    kpos = jnp.arange(k_cache.shape[2])
+    mask = kpos < valid_len
+    scores = jnp.where(mask[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bgqt,bgtd->bgqd", probs, v_cache)
+    return out.reshape(b, 1, h, hd)
+
+
+def cache_insert(cache: jnp.ndarray, kv: jnp.ndarray, slot) -> jnp.ndarray:
+    """Insert (B, 1, G, hd) projections at ``slot`` of a (B, G, S, hd) cache."""
+    kv = kv.swapaxes(1, 2).astype(cache.dtype)   # -> (B, G, 1, hd)
+    return jax.lax.dynamic_update_slice_in_dim(cache, kv, slot, axis=2)
+
+
+def cache_insert_quant(cache: jnp.ndarray, scale: jnp.ndarray,
+                       kv: jnp.ndarray, slot):
+    """int8 KV-cache insert with one fp scale per (b, head, position) vector
+    (the paper's Q-format fixed point, applied to decode HBM traffic).
+
+    cache (B,G,S,hd) int8, scale (B,G,S) f32, kv (B,1,G,hd)."""
+    kv = kv.swapaxes(1, 2).astype(jnp.float32)   # (B, G, 1, hd)
+    amax = jnp.max(jnp.abs(kv), axis=-1)         # (B, G, 1)
+    s = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(kv / s[..., None]), -127, 127).astype(jnp.int8)
+    cache = jax.lax.dynamic_update_slice_in_dim(cache, q, slot, axis=2)
+    scale = jax.lax.dynamic_update_slice_in_dim(
+        scale, s.astype(scale.dtype), slot, axis=2)
+    return cache, scale
+
+
+def cache_dequant(cache: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
+    """(B,G,S,hd) int8 x (B,G,S) scales -> dtype. On TPU the dequant fuses
+    into the attention dot's operand read: HBM moves the int8 bytes."""
+    return (cache.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def attention_out(p: dict, attn: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    b, s = attn.shape[:2]
+    flat = attn.reshape(b, s, cfg.num_heads * cfg.resolved_head_dim)
+    return jnp.einsum("bsh,hd->bsd", flat, p["wo"].astype(attn.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, ff: int, layers: Optional[int] = None, gated=True) -> dict:
+    ks = jax.random.split(key, 3)
+    lead = () if layers is None else (layers,)
+    if gated:
+        return {
+            "w_gate": dense_init(ks[0], (*lead, d, ff), in_axis=len(lead)),
+            "w_up": dense_init(ks[1], (*lead, d, ff), in_axis=len(lead)),
+            "w_down": dense_init(ks[2], (*lead, ff, d), in_axis=len(lead)),
+        }
+    return {
+        "w1": dense_init(ks[0], (*lead, d, ff), in_axis=len(lead)),
+        "b1": jnp.zeros((*lead, ff), jnp.float32),
+        "w2": dense_init(ks[1], (*lead, ff, d), in_axis=len(lead)),
+        "b2": jnp.zeros((*lead, d), jnp.float32),
+    }
+
+
+def mlp_specs(layers: bool, gated=True) -> dict:
+    lead = ("layers",) if layers else ()
+    if gated:
+        return {
+            "w_gate": P(*lead, "embed_fsdp", "mlp"),
+            "w_up": P(*lead, "embed_fsdp", "mlp"),
+            "w_down": P(*lead, "mlp", "embed_fsdp"),
+        }
+    return {
+        "w1": P(*lead, "embed_fsdp", "mlp"),
+        "b1": P(*lead, "mlp"),
+        "w2": P(*lead, "mlp", "embed_fsdp"),
+        "b2": P(*lead, "embed_fsdp"),
+    }
+
+
+def gated_mlp(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    dt = x.dtype
+    gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+    act = (jax.nn.silu(gate.astype(jnp.float32)) * up.astype(jnp.float32)).astype(dt)
+    return jnp.einsum("bsf,fd->bsd", act, p["w_down"].astype(dt))
+
+
+def gelu_mlp(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    dt = x.dtype
+    h = jnp.einsum("bsd,df->bsf", x, p["w1"].astype(dt)) + p["b1"].astype(dt)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(dt)
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"].astype(dt)) + p["b2"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head / loss
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 2)
+    p = {"tok": embed_init(ks[0], (cfg.padded_vocab, cfg.d_model))}
+    if not cfg.tie_embeddings:
+        p["out"] = dense_init(ks[1], (cfg.d_model, cfg.padded_vocab))
+    return p
+
+
+def embedding_specs(cfg: ModelConfig) -> dict:
+    s = {"tok": P("vocab", "embed_fsdp")}
+    if not cfg.tie_embeddings:
+        s["out"] = P("embed_fsdp", "vocab")
+    return s
+
+
+def embed_tokens(p: dict, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    x = jnp.take(p["tok"], tokens, axis=0).astype(cdtype(cfg))
+    return constrain(x, ("batch", "seq", "embed"))
+
+
+def lm_logits(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    dt = x.dtype
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, p["tok"].astype(dt))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, p["out"].astype(dt))
+    if cfg.padded_vocab != cfg.vocab_size:  # mask padding ids
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, NEG_INF)
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+def cross_entropy_loss(
+    logits: jnp.ndarray, labels: jnp.ndarray, mask: Optional[jnp.ndarray] = None
+) -> jnp.ndarray:
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

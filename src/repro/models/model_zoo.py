@@ -1,0 +1,153 @@
+"""Unified model API: one dispatch point for all 10 assigned architectures.
+
+``get_model(cfg)`` returns a ModelAPI whose members close over the config:
+loss_fn / prefill / decode_step plus shape-only helpers (batch_spec,
+cache_shape) used by the multi-pod dry-run (ShapeDtypeStruct, no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer, whisper, xlstm_lm, zamba
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init_params: Callable[..., Any]
+    param_specs: Callable[[], Any]
+    loss_fn: Callable[[Any, Dict], jnp.ndarray]
+    prefill: Callable[[Any, Dict], jnp.ndarray]
+    decode_step: Callable[..., Any]
+    cache_shape: Callable[[int, int], Dict]
+    cache_specs: Callable[[], Dict]
+    init_cache: Callable[[int, int], Dict]
+    batch_spec: Callable[[ShapeConfig], Dict]
+    batch_logical: Callable[[ShapeConfig], Dict]
+
+
+def _token_batch_spec(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input (dry-run input_specs)."""
+    b, s = shape.global_batch, shape.seq_len
+    tok = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.int32)
+    emb = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.dtype(cfg.dtype))
+    if shape.kind == "decode":
+        return {
+            "cache": None,  # filled by caller via cache_shape
+            "tokens": tok(b, 1),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    if cfg.family == "audio":
+        d = {"frame_embeds": emb(b, s, cfg.d_model), "tokens": tok(b, s)}
+    elif cfg.family == "vlm":
+        ft = cfg.frontend_tokens
+        d = {"prefix_embeds": emb(b, ft, cfg.d_model), "tokens": tok(b, s - ft)}
+    else:
+        d = {"tokens": tok(b, s)}
+    if shape.kind == "train":
+        d["labels"] = tok(*d["tokens"].shape)
+    return d
+
+
+def _token_batch_logical(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    if shape.kind == "decode":
+        return {"cache": None, "tokens": P("batch"), "pos": P()}
+    out = {"tokens": P("batch", "seq")}
+    if cfg.family == "audio":
+        out["frame_embeds"] = P("batch", "seq", "embed")
+    if cfg.family == "vlm":
+        out["prefix_embeds"] = P("batch", "seq", "embed")
+    if shape.kind == "train":
+        out["labels"] = P("batch", "seq")
+    return out
+
+
+def get_model(cfg: ModelConfig) -> ModelAPI:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        mod = transformer
+
+        def loss(params, batch):
+            return mod.loss_fn(params, cfg, batch)
+
+        def pre(params, batch):
+            return mod.prefill(
+                params, cfg, batch["tokens"], batch.get("prefix_embeds")
+            )
+
+    elif fam == "hybrid":
+        mod = zamba
+
+        def loss(params, batch):
+            return mod.loss_fn(params, cfg, batch)
+
+        def pre(params, batch):
+            return mod.prefill(params, cfg, batch["tokens"])
+
+    elif fam == "ssm":
+        mod = xlstm_lm
+
+        def loss(params, batch):
+            return mod.loss_fn(params, cfg, batch)
+
+        def pre(params, batch):
+            return mod.prefill(params, cfg, batch["tokens"])
+
+    elif fam == "audio":
+        mod = whisper
+
+        def loss(params, batch):
+            return mod.loss_fn(params, cfg, batch)
+
+        def pre(params, batch):
+            return mod.prefill(params, cfg, batch)
+
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+
+    return ModelAPI(
+        cfg=cfg,
+        init_params=lambda key, max_seq=4096: mod.init_params(key, cfg, max_seq),
+        param_specs=lambda: mod.param_specs(cfg),
+        loss_fn=loss,
+        prefill=pre,
+        decode_step=lambda params, cache, tokens, pos: mod.decode_step(
+            params, cfg, cache, tokens, pos
+        ),
+        cache_shape=lambda batch, seq: mod.cache_shape(cfg, batch, seq),
+        cache_specs=lambda: mod.cache_specs(cfg),
+        init_cache=lambda batch, seq: mod.init_cache(cfg, batch, seq),
+        batch_spec=lambda shape: _token_batch_spec(cfg, shape),
+        batch_logical=lambda shape: _token_batch_logical(cfg, shape),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Analytic parameter counts (for MODEL_FLOPS = 6*N*D in the roofline)
+# ---------------------------------------------------------------------------
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Exact count via abstract init (no allocation); MoE active subset
+    counts each token's experts_per_token of num_experts expert FFNs."""
+    api = get_model(cfg)
+    shapes = jax.eval_shape(lambda: api.init_params(jax.random.key(0), 128))
+    total = 0
+    moe_expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        if "moe" in keys and any(k.startswith("w_") for k in keys if k):
+            moe_expert += n
+    if active_only and cfg.num_experts > 0:
+        frac = cfg.experts_per_token / cfg.num_experts
+        total = total - moe_expert + int(moe_expert * frac)
+    return total

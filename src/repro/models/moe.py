@@ -1,0 +1,108 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-based dispatch.
+
+GShard/Switch-style: tokens are routed to their top-k experts, dispatched by
+scatter into per-expert capacity buffers (so compiled FLOPs reflect *active*
+experts only — required for the MoE roofline's 6*N_active*D accounting), run
+through batched expert FFNs, and combined with router weights.  Experts shard
+over the "model" mesh axis (expert parallelism); the dispatch/combine scatter
++ gather become the MoE all-to-all under GSPMD.
+
+The router's top-k uses the same merge primitive as the paper's partitioned
+Top-K (core/partition.py): experts == partitions, k == experts_per_token.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding.rules import constrain
+
+
+def init_moe(key, cfg: ModelConfig, layers: int) -> dict:
+    ks = jax.random.split(key, 4)
+    nl, d, ff, e = layers, cfg.d_model, cfg.d_ff, cfg.num_experts
+    return {
+        "router": L.dense_init(ks[0], (nl, d, e), in_axis=1),
+        "w_gate": L.dense_init(ks[1], (nl, e, d, ff), in_axis=2),
+        "w_up": L.dense_init(ks[2], (nl, e, d, ff), in_axis=2),
+        "w_down": L.dense_init(ks[3], (nl, e, ff, d), in_axis=2),
+    }
+
+
+def moe_specs(cfg: ModelConfig, layers: bool) -> dict:
+    lead = ("layers",) if layers else ()
+    return {
+        "router": P(*lead, "embed", None),
+        "w_gate": P(*lead, "experts", "embed_fsdp", "expert_mlp"),
+        "w_up": P(*lead, "experts", "embed_fsdp", "expert_mlp"),
+        "w_down": P(*lead, "experts", "expert_mlp", "embed_fsdp"),
+    }
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    if tokens <= 256:
+        # decode / tiny batches: drop-free (worst case all tokens co-route)
+        return tokens * cfg.experts_per_token
+    cap = int(tokens * cfg.experts_per_token * cfg.moe_capacity_factor
+              / cfg.num_experts)
+    return max(cap, cfg.experts_per_token)
+
+
+def moe_mlp(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (y, aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    t = b * s
+    cap = _capacity(t, cfg)
+    xt = x.reshape(t, d)
+
+    # --- routing (top-k over experts; softmax over the selected gates) ---
+    logits = jnp.einsum("td,de->te", xt, p["router"].astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)          # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9
+    )
+
+    # --- load-balancing auxiliary loss (Switch-style) ---
+    me = probs.mean(axis=0)                                   # mean router prob
+    ce = jnp.zeros((e,), jnp.float32).at[expert_idx[:, 0]].add(1.0) / t
+    aux = e * jnp.sum(me * ce)
+
+    # --- capacity assignment: position of each (token, slot) in its expert ---
+    flat_expert = expert_idx.reshape(-1)                      # (T*k,)
+    onehot = jax.nn.one_hot(flat_expert, e, dtype=jnp.int32)  # (T*k, E)
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) - onehot)[
+        jnp.arange(t * k), flat_expert
+    ]
+    keep = pos_in_expert < cap                                # overflow dropped
+
+    # --- dispatch: scatter tokens into (E, C, D) buffers (the all-to-all) ---
+    src = jnp.repeat(xt, k, axis=0)                           # (T*k, D)
+    safe_pos = jnp.where(keep, pos_in_expert, cap - 1)
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[flat_expert, safe_pos].add(
+        jnp.where(keep[:, None], src, 0).astype(x.dtype)
+    )
+    buf = constrain(buf, ("experts", "expert_cap", "embed"))
+
+    # --- expert FFNs (batched over E; sharded over "model" via experts) ---
+    gate = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(x.dtype))
+    up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(x.dtype))
+    act = (jax.nn.silu(gate.astype(jnp.float32)) * up.astype(jnp.float32)
+           ).astype(x.dtype)
+    out = jnp.einsum("ecf,efd->ecd", act, p["w_down"].astype(x.dtype))
+    out = constrain(out, ("experts", "expert_cap", "embed"))
+
+    # --- combine: gather each (token, slot)'s result, weight, and sum ---
+    gathered = out[flat_expert, safe_pos]                     # (T*k, D)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    w = gate_vals.reshape(-1)[:, None].astype(x.dtype)
+    y = (gathered * w).reshape(t, k, d).sum(axis=1)
+    return y.reshape(b, s, d), aux

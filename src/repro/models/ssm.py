@@ -1,0 +1,213 @@
+"""Mamba2 (SSD) blocks — chunked state-space duality scan, JAX-native.
+
+Implements the minimal-SSD formulation: within a chunk the recurrence is
+evaluated as decay-masked attention (MXU-friendly), between chunks a
+``lax.scan`` carries the (B, H, P, N) state.  Decode is the O(1) recurrent
+step.  Used by zamba2 (hybrid) and available standalone.
+
+Shapes: d_inner = expand * d_model, H = d_inner / head_dim (P = head_dim),
+N = ssm_state.  Single B/C group (broadcast over heads), as in Mamba2's
+n_groups=1 configuration.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = d_inner // cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * cfg.ssm_state
+    return d_inner, heads, cfg.ssm_head_dim, cfg.ssm_state, conv_dim
+
+
+def init_mamba(key, cfg: ModelConfig, layers: int) -> dict:
+    di, h, p_dim, n, conv_dim = dims(cfg)
+    proj_out = 2 * di + 2 * n + h           # z, x, B, C, dt
+    ks = jax.random.split(key, 4)
+    nl = layers
+    return {
+        "ln": jnp.zeros((nl, cfg.d_model), jnp.float32),
+        "in_proj": L.dense_init(ks[0], (nl, cfg.d_model, proj_out), in_axis=1),
+        "conv_w": L.dense_init(ks[1], (nl, conv_dim, cfg.ssm_conv), in_axis=2),
+        "conv_b": jnp.zeros((nl, conv_dim), jnp.float32),
+        "a_log": jnp.zeros((nl, h), jnp.float32),            # A = -exp(a_log) = -1
+        "d_skip": jnp.ones((nl, h), jnp.float32),
+        "dt_bias": jnp.full((nl, h), -2.0, jnp.float32),     # softplus ~ 0.12
+        "norm": jnp.zeros((nl, di), jnp.float32),
+        "out_proj": L.dense_init(ks[2], (nl, di, cfg.d_model), in_axis=1),
+    }
+
+
+def mamba_specs(cfg: ModelConfig, layers: bool = True) -> dict:
+    lead = ("layers",) if layers else ()
+    return {
+        "ln": P(*lead, "embed"),
+        "in_proj": P(*lead, "embed_fsdp", "conv_dim"),
+        "conv_w": P(*lead, "conv_dim", None),
+        "conv_b": P(*lead, "conv_dim"),
+        "a_log": P(*lead, "ssm_heads"),
+        "d_skip": P(*lead, "ssm_heads"),
+        "dt_bias": P(*lead, "ssm_heads"),
+        "norm": P(*lead, "conv_dim"),
+        "out_proj": P(*lead, "conv_dim", "embed_fsdp"),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv; x (B,S,C), w (C,K). K shifted adds (K is tiny)."""
+    k = w.shape[-1]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(
+        pad[:, i : i + x.shape[1], :] * w[None, None, :, k - 1 - i].astype(x.dtype)
+        for i in range(k)
+    )
+    return y + b.astype(x.dtype)
+
+
+def _split_proj(zxbcdt: jnp.ndarray, cfg: ModelConfig):
+    di, h, _, n, _ = dims(cfg)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n :]
+    return z, xbc, dt
+
+
+def _gated_out(blk, y_flat: jnp.ndarray, z: jnp.ndarray, cfg: ModelConfig):
+    y = L.rms_norm(
+        y_flat * jax.nn.silu(z.astype(jnp.float32)).astype(y_flat.dtype),
+        blk["norm"],
+        cfg.norm_eps,
+    )
+    return jnp.einsum("bsd,de->bse", y, blk["out_proj"].astype(y.dtype))
+
+
+def mamba_block(blk: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Full-sequence Mamba2 block (training / prefill).  x: (B, S, D)."""
+    b, s, _ = x.shape
+    di, h, p_dim, n, _ = dims(cfg)
+    q_chunk = min(cfg.ssm_chunk, s)
+    if s % q_chunk:
+        q_chunk = s
+    nc = s // q_chunk
+
+    hidden = L.rms_norm(x, blk["ln"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,dp->bsp", hidden, blk["in_proj"].astype(x.dtype))
+    z, xbc, dt_raw = _split_proj(zxbcdt, cfg)
+    xbc = jax.nn.silu(
+        _causal_conv(xbc, blk["conv_w"], blk["conv_b"]).astype(jnp.float32)
+    ).astype(x.dtype)
+    xs, b_mat, c_mat = xbc[..., :di], xbc[..., di : di + n], xbc[..., di + n :]
+    xh = xs.reshape(b, s, h, p_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + blk["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(blk["a_log"].astype(jnp.float32))                     # (H,)
+    da = dt * a                                                        # (B,S,H)
+
+    # chunked scan: carry the (B,H,P,N) state between chunks
+    def chunk_fn(state, inp):
+        xh_c, b_c, c_c, dt_c, da_c = inp                 # (B,Q,...) fp32 gates
+        cum = jnp.cumsum(da_c, axis=1)                   # (B,Q,H)
+        # intra-chunk decay-masked attention (fp32 for stability)
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,Q,Qk,H)
+        qpos = jnp.arange(xh_c.shape[1])
+        causal = (qpos[:, None] >= qpos[None, :])[None, :, :, None]
+        cb = jnp.einsum(
+            "bqn,btn->bqt", c_c, b_c, preferred_element_type=jnp.float32
+        )
+        scores = jnp.where(causal, cb[..., None] * decay * dt_c[:, None], 0.0)
+        y_intra = jnp.einsum(
+            "bqth,bthp->bqhp", scores.astype(x.dtype), xh_c
+        )
+        # inter-chunk contribution from the carried state
+        y_inter = jnp.einsum(
+            "bqn,bhpn->bqhp", c_c, state, preferred_element_type=jnp.float32
+        ) * jnp.exp(cum)[..., None]
+        # state update
+        w_end = jnp.exp(cum[:, -1:, :] - cum) * dt_c     # (B,Q,H)
+        state = state * jnp.exp(cum[:, -1])[:, :, None, None]
+        state = state + jnp.einsum(
+            "btn,bthp,bth->bhpn", b_c, xh_c.astype(jnp.float32), w_end,
+            preferred_element_type=jnp.float32,
+        )
+        return state, (y_intra.astype(jnp.float32) + y_inter).astype(x.dtype)
+
+    reshape_c = lambda t: t.reshape(b, nc, q_chunk, *t.shape[2:]).swapaxes(0, 1)
+    state0 = jnp.zeros((b, h, p_dim, n), jnp.float32)
+    _, y_chunks = jax.lax.scan(
+        chunk_fn,
+        state0,
+        (
+            reshape_c(xh),
+            reshape_c(b_mat.astype(jnp.float32)),
+            reshape_c(c_mat.astype(jnp.float32)),
+            reshape_c(dt),
+            reshape_c(da),
+        ),
+    )
+    y = y_chunks.swapaxes(0, 1).reshape(b, s, h, p_dim)
+    y = y + blk["d_skip"].astype(x.dtype)[None, None, :, None] * xh
+    return x + _gated_out(blk, y.reshape(b, s, di), z, cfg)
+
+
+# ---------------------------------------------------------------------------
+# O(1) decode step
+# ---------------------------------------------------------------------------
+
+def mamba_cache_shape(cfg: ModelConfig, layers: int, batch: int) -> dict:
+    di, h, p_dim, n, conv_dim = dims(cfg)
+    return {
+        "ssm": jax.ShapeDtypeStruct((layers, batch, h, p_dim, n), jnp.float32),
+        "conv": jax.ShapeDtypeStruct(
+            (layers, batch, cfg.ssm_conv - 1, conv_dim), jnp.dtype(cfg.dtype)
+        ),
+    }
+
+
+def mamba_cache_specs() -> dict:
+    return {
+        "ssm": P("layers", "batch", "ssm_heads", None, None),
+        "conv": P("layers", "batch", None, "conv_dim"),
+    }
+
+
+def mamba_decode_block(
+    blk: dict,
+    x: jnp.ndarray,            # (B, 1, D)
+    ssm_state: jnp.ndarray,    # (B, H, P, N) fp32
+    conv_state: jnp.ndarray,   # (B, K-1, conv_dim)
+    cfg: ModelConfig,
+):
+    b = x.shape[0]
+    di, h, p_dim, n, conv_dim = dims(cfg)
+    hidden = L.rms_norm(x, blk["ln"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,dp->bsp", hidden, blk["in_proj"].astype(x.dtype))
+    z, xbc, dt_raw = _split_proj(zxbcdt, cfg)
+    # conv over [oldest ... current]; w[:, j] weights lag j (matches _causal_conv)
+    full = jnp.concatenate([conv_state, xbc], axis=1)       # (B, K, conv_dim)
+    conv = jnp.einsum(
+        "bkc,ck->bc", full, blk["conv_w"][:, ::-1].astype(x.dtype)
+    )
+    conv = conv + blk["conv_b"].astype(x.dtype)
+    xbc_t = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    new_conv_state = full[:, 1:]
+
+    xs, b_vec, c_vec = xbc_t[:, :di], xbc_t[:, di : di + n], xbc_t[:, di + n :]
+    xh = xs.reshape(b, h, p_dim).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + blk["dt_bias"])  # (B,H)
+    a = -jnp.exp(blk["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a)                                    # (B,H)
+    state = ssm_state * da[:, :, None, None] + jnp.einsum(
+        "bn,bhp,bh->bhpn", b_vec.astype(jnp.float32), xh, dt
+    )
+    y = jnp.einsum("bn,bhpn->bhp", c_vec.astype(jnp.float32), state)
+    y = y + blk["d_skip"].astype(jnp.float32) [None, :, None] * xh
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    out = x + _gated_out(blk, y, z, cfg)
+    return out, state, new_conv_state

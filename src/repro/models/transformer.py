@@ -1,0 +1,263 @@
+"""Dense decoder-only transformer (llama/qwen/granite-style) + MoE variant.
+
+Covers qwen2.5-3b, granite-8b, smollm-360m, qwen2-72b (dense), mixtral-8x7b,
+phi3.5-moe (num_experts > 0), and the internvl2 text backbone.  Layers are
+scan-stacked; each block is remat'd per ``cfg.remat``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.sharding.rules import constrain
+
+
+def is_moe(cfg: ModelConfig) -> bool:
+    return cfg.num_experts > 0
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig, max_seq: int = 0) -> dict:
+    del max_seq  # RoPE models need no position table
+    ks = jax.random.split(key, 5)
+    nl = cfg.num_layers
+    blocks = {
+        "ln1": jnp.zeros((nl, cfg.d_model), jnp.float32),
+        "attn": L.init_attention(ks[0], cfg, layers=nl),
+        "ln2": jnp.zeros((nl, cfg.d_model), jnp.float32),
+    }
+    if is_moe(cfg):
+        blocks["moe"] = moe_lib.init_moe(ks[1], cfg, layers=nl)
+    else:
+        blocks["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, layers=nl)
+    return {
+        "embed": L.init_embedding(ks[2], cfg),
+        "blocks": blocks,
+        "ln_f": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    blocks = {
+        "ln1": P("layers", "embed"),
+        "attn": L.attention_specs(cfg, layers=True),
+        "ln2": P("layers", "embed"),
+    }
+    if is_moe(cfg):
+        blocks["moe"] = moe_lib.moe_specs(cfg, layers=True)
+    else:
+        blocks["mlp"] = L.mlp_specs(layers=True)
+    return {
+        "embed": L.embedding_specs(cfg),
+        "blocks": blocks,
+        "ln_f": P("embed"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _block(x, blk, cfg: ModelConfig, positions):
+    h = L.rms_norm(x, blk["ln1"], cfg.norm_eps)
+    q, k, v = L.qkv_project(blk["attn"], h, cfg, positions)
+    attn = L.blockwise_attention(
+        q, k, v, causal=True, sliding_window=cfg.sliding_window
+    )
+    x = x + L.attention_out(blk["attn"], attn, cfg)
+    x = constrain(x, ("batch", "seq", "embed"))
+    h = L.rms_norm(x, blk["ln2"], cfg.norm_eps)
+    if is_moe(cfg):
+        y, aux = moe_lib.moe_mlp(blk["moe"], h, cfg)
+    else:
+        y, aux = L.gated_mlp(blk["mlp"], h), 0.0
+    x = x + y
+    return constrain(x, ("batch", "seq", "embed")), aux
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def forward(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,                       # (B, S) int32
+    prefix_embeds: Optional[jnp.ndarray] = None,  # (B, Sp, D) modality stub
+) -> jnp.ndarray:
+    """Returns final hidden states (B, S_total, D)."""
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+        x = constrain(x, ("batch", "seq", "embed"))
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    block = _remat(functools.partial(_block, cfg=cfg, positions=positions), cfg)
+
+    def scan_body(carry, blk):
+        x, aux = carry
+        x, aux_i = block(x, blk)
+        return (x, aux + aux_i), None
+
+    (x, aux), _ = jax.lax.scan(scan_body, (x, 0.0), params["blocks"])
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x, aux
+
+
+def loss_fn(
+    params: dict,
+    cfg: ModelConfig,
+    batch: dict,
+) -> jnp.ndarray:
+    """batch: tokens (B,S), labels (B,S), optional prefix_embeds / loss_mask."""
+    x, aux = forward(params, cfg, batch["tokens"], batch.get("prefix_embeds"))
+    if batch.get("prefix_embeds") is not None:
+        x = x[:, batch["prefix_embeds"].shape[1] :]  # loss on text positions only
+    logits = L.lm_logits(params["embed"], x, cfg)
+    loss = L.cross_entropy_loss(logits, batch["labels"], batch.get("loss_mask"))
+    return loss + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode with a KV cache
+# ---------------------------------------------------------------------------
+
+def cache_shape(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """Abstract KV-cache structure (used for ShapeDtypeStruct in the dry-run)."""
+    window = min(seq, cfg.sliding_window) if cfg.sliding_window else seq
+    kv = (cfg.num_layers, batch, cfg.num_kv_heads, window, cfg.resolved_head_dim)
+    dt = jnp.dtype(jnp.int8) if cfg.kv_quant else jnp.dtype(cfg.dtype)
+    out = {
+        "k": jax.ShapeDtypeStruct(kv, dt),
+        "v": jax.ShapeDtypeStruct(kv, dt),
+    }
+    if cfg.kv_quant:
+        sc = kv[:-1]
+        out["k_scale"] = jax.ShapeDtypeStruct(sc, jnp.float32)
+        out["v_scale"] = jax.ShapeDtypeStruct(sc, jnp.float32)
+    return out
+
+
+def cache_specs(cfg: ModelConfig) -> dict:
+    spec = P("layers", "batch", "kv_heads", "cache_seq", None)
+    out = {"k": spec, "v": spec}
+    if cfg.kv_quant:
+        sc = P("layers", "batch", "kv_heads", "cache_seq")
+        out["k_scale"] = sc
+        out["v_scale"] = sc
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_shape(cfg, batch, seq)
+    )
+
+
+def _decode_block(x, blk_and_cache, cfg: ModelConfig, pos):
+    """One-token decode for one layer; x (B,1,D).
+
+    blk_and_cache: (blk, kc, vc) or with kv_quant (blk, kc, vc, ks, vs)."""
+    if cfg.kv_quant:
+        blk, kc, vc, ks, vs = blk_and_cache
+    else:
+        blk, kc, vc = blk_and_cache
+        ks = vs = None
+    window = kc.shape[2]
+    slot = pos % window if cfg.sliding_window else pos
+    h = L.rms_norm(x, blk["ln1"], cfg.norm_eps)
+    q, k, v = L.qkv_project(blk["attn"], h, cfg, pos[None, None])
+    if cfg.kv_quant:
+        kc, ks = L.cache_insert_quant(kc, ks, k, slot)
+        vc, vs = L.cache_insert_quant(vc, vs, v, slot)
+        k_at = L.cache_dequant(kc, ks, x.dtype)
+        v_at = L.cache_dequant(vc, vs, x.dtype)
+    else:
+        kc = L.cache_insert(kc, k, slot)
+        vc = L.cache_insert(vc, v, slot)
+        k_at, v_at = kc, vc
+    valid = jnp.minimum(pos + 1, window)
+    attn = L.decode_attention(q, k_at, v_at, valid)
+    x = x + L.attention_out(blk["attn"], attn, cfg)
+    h = L.rms_norm(x, blk["ln2"], cfg.norm_eps)
+    if is_moe(cfg):
+        y, _ = moe_lib.moe_mlp(blk["moe"], h, cfg)
+    else:
+        y = L.gated_mlp(blk["mlp"], h)
+    if cfg.kv_quant:
+        return x + y, kc, vc, ks, vs
+    return x + y, kc, vc
+
+
+def decode_step(
+    params: dict,
+    cfg: ModelConfig,
+    cache: dict,
+    tokens: jnp.ndarray,     # (B, 1) int32
+    pos: jnp.ndarray,        # scalar int32: absolute position of this token
+    return_hidden: bool = False,
+) -> Tuple[jnp.ndarray, dict]:
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+
+    keys = ["k", "v"] + (["k_scale", "v_scale"] if cfg.kv_quant else [])
+
+    def scan_body(x, blk_and_cache):
+        outs = _decode_block(x, blk_and_cache, cfg, pos)
+        return outs[0], outs[1:]
+
+    if cfg.scan_layers:
+        x, new = jax.lax.scan(
+            scan_body, x, (params["blocks"], *[cache[c] for c in keys])
+        )
+        new_cache = dict(zip(keys, new))
+    else:
+        # unrolled: in-place per-layer cache updates on the donated buffer —
+        # avoids the scan-ys stacking copy of the whole cache (§Perf B2)
+        bufs = {c: cache[c] for c in keys}
+        for l in range(cfg.num_layers):
+            blk = jax.tree.map(lambda t: t[l], params["blocks"])
+            outs = _decode_block(
+                x, (blk, *[bufs[c][l] for c in keys]), cfg, pos)
+            x = outs[0]
+            for c, val in zip(keys, outs[1:]):
+                bufs[c] = jax.lax.dynamic_update_index_in_dim(bufs[c], val, l, 0)
+        new_cache = bufs
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    if return_hidden:
+        # Serving with the ApproxTopKHead: the V x D logits matmul is replaced
+        # by the paper's partitioned Top-K SpMV over the sparsified embedding.
+        return x[:, 0], new_cache
+    logits = L.lm_logits(params["embed"], x, cfg)
+    return logits[:, 0], new_cache
+
+
+def prefill(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,
+    prefix_embeds: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Forward over the prompt, returning last-position logits.
+
+    (The serving engine uses decode_step for incremental generation; prefill
+    lowers the full-sequence compute path, which is what the prefill_32k cell
+    measures.)
+    """
+    x, _ = forward(params, cfg, tokens, prefix_embeds)
+    logits = L.lm_logits(params["embed"], x[:, -1:], cfg)
+    return logits[:, 0]

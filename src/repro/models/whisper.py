@@ -1,0 +1,272 @@
+"""Whisper-style encoder-decoder backbone (conv frontend stubbed).
+
+``input_specs()`` supplies precomputed frame embeddings (batch, S_enc, d) —
+per the assignment the modality frontend is a stub.  Encoder: non-causal
+self-attention, sinusoidal positions, GELU MLP, LayerNorm.  Decoder: causal
+self-attention + cross-attention, learned positions.  Convention (DESIGN.md
+§4): encoder length == decoder length == the shape's seq_len.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def sinusoids(length: int, channels: int) -> jnp.ndarray:
+    """Whisper's sinusoidal position embedding for the encoder."""
+    log_timescale = np.log(10000.0) / (channels // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(channels // 2, dtype=jnp.float32))
+    scaled = jnp.arange(length, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=1)
+
+
+def _ln_params(lead, d):
+    return {"w": jnp.ones((*lead, d), jnp.float32),
+            "b": jnp.zeros((*lead, d), jnp.float32)}
+
+
+def _ln_specs(lead):
+    return {"w": P(*lead, "embed"), "b": P(*lead, "embed")}
+
+
+def init_params(key, cfg: ModelConfig, max_seq: int) -> dict:
+    ks = jax.random.split(key, 8)
+    ne, nd, d = cfg.encoder_layers, cfg.num_layers, cfg.d_model
+    enc_blocks = {
+        "ln1": _ln_params((ne,), d),
+        "attn": L.init_attention(ks[0], cfg, layers=ne),
+        "ln2": _ln_params((ne,), d),
+        "mlp": L.init_mlp(ks[1], d, cfg.d_ff, layers=ne, gated=False),
+    }
+    dec_blocks = {
+        "ln1": _ln_params((nd,), d),
+        "self_attn": L.init_attention(ks[2], cfg, layers=nd),
+        "ln2": _ln_params((nd,), d),
+        "cross_attn": L.init_attention(ks[3], cfg, layers=nd),
+        "ln3": _ln_params((nd,), d),
+        "mlp": L.init_mlp(ks[4], d, cfg.d_ff, layers=nd, gated=False),
+    }
+    return {
+        "embed": L.init_embedding(ks[5], cfg),
+        "dec_pos": L.embed_init(ks[6], (max_seq, d)),
+        "enc_blocks": enc_blocks,
+        "enc_ln_f": _ln_params((), d),
+        "dec_blocks": dec_blocks,
+        "dec_ln_f": _ln_params((), d),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    lead = ("layers",)
+    enc = {
+        "ln1": _ln_specs(lead),
+        "attn": L.attention_specs(cfg, layers=True),
+        "ln2": _ln_specs(lead),
+        "mlp": L.mlp_specs(layers=True, gated=False),
+    }
+    dec = {
+        "ln1": _ln_specs(lead),
+        "self_attn": L.attention_specs(cfg, layers=True),
+        "ln2": _ln_specs(lead),
+        "cross_attn": L.attention_specs(cfg, layers=True),
+        "ln3": _ln_specs(lead),
+        "mlp": L.mlp_specs(layers=True, gated=False),
+    }
+    return {
+        "embed": L.embedding_specs(cfg),
+        "dec_pos": P("seq", "embed_fsdp"),
+        "enc_blocks": enc,
+        "enc_ln_f": _ln_specs(()),
+        "dec_blocks": dec,
+        "dec_ln_f": _ln_specs(()),
+    }
+
+
+def _ln(x, p, eps):
+    return L.layer_norm(x, p["w"], p["b"], eps)
+
+
+def _remat(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat != "none" else fn
+
+
+def encode(params, cfg: ModelConfig, frame_embeds: jnp.ndarray) -> jnp.ndarray:
+    """frame_embeds: (B, S_enc, D) precomputed (conv frontend stub)."""
+    x = frame_embeds.astype(L.cdtype(cfg))
+    x = x + sinusoids(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def block(x, blk):
+        h = _ln(x, blk["ln1"], cfg.norm_eps)
+        q, k, v = L.qkv_project(blk["attn"], h, cfg, positions)
+        attn = L.blockwise_attention(q, k, v, causal=False)
+        x = x + L.attention_out(blk["attn"], attn, cfg)
+        h = _ln(x, blk["ln2"], cfg.norm_eps)
+        return x + L.gelu_mlp(blk["mlp"], h)
+
+    block = _remat(block, cfg)
+
+    def scan_body(x, blk):
+        return block(x, blk), None
+
+    x, _ = jax.lax.scan(scan_body, x, params["enc_blocks"])
+    return _ln(x, params["enc_ln_f"], cfg.norm_eps)
+
+
+def _cross_attention(blk_key, blk, x, enc_out, cfg):
+    """Decoder cross-attention: q from x, kv from encoder output (no RoPE)."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    p = blk[blk_key]
+    dt = x.dtype
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dh->bsh", enc_out, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dh->bsh", enc_out, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"].astype(dt), k + p["bk"].astype(dt), v + p["bv"].astype(dt)
+    q = q.reshape(b, s, cfg.num_heads, hd)
+    k = k.reshape(b, enc_out.shape[1], cfg.num_kv_heads, hd)
+    v = v.reshape(b, enc_out.shape[1], cfg.num_kv_heads, hd)
+    attn = L.blockwise_attention(q, k, v, causal=False)
+    return L.attention_out(p, attn, cfg)
+
+
+def decode_train(params, cfg: ModelConfig, tokens, enc_out) -> jnp.ndarray:
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    x = x + params["dec_pos"][: x.shape[1]].astype(x.dtype)[None]
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def block(x, blk):
+        h = _ln(x, blk["ln1"], cfg.norm_eps)
+        q, k, v = L.qkv_project(blk["self_attn"], h, cfg, positions)
+        attn = L.blockwise_attention(q, k, v, causal=True)
+        x = x + L.attention_out(blk["self_attn"], attn, cfg)
+        h = _ln(x, blk["ln2"], cfg.norm_eps)
+        x = x + _cross_attention("cross_attn", blk, h, enc_out, cfg)
+        h = _ln(x, blk["ln3"], cfg.norm_eps)
+        return x + L.gelu_mlp(blk["mlp"], h)
+
+    block = _remat(block, cfg)
+
+    def scan_body(x, blk):
+        return block(x, blk), None
+
+    x, _ = jax.lax.scan(scan_body, x, params["dec_blocks"])
+    return _ln(x, params["dec_ln_f"], cfg.norm_eps)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict) -> jnp.ndarray:
+    enc_out = encode(params, cfg, batch["frame_embeds"])
+    x = decode_train(params, cfg, batch["tokens"], enc_out)
+    logits = L.lm_logits(params["embed"], x, cfg)
+    return L.cross_entropy_loss(logits, batch["labels"], batch.get("loss_mask"))
+
+
+# ---------------------------------------------------------------------------
+# Serving: decoder decode step with self-KV cache + precomputed cross-KV
+# ---------------------------------------------------------------------------
+
+def cache_shape(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    hd = cfg.resolved_head_dim
+    nd = cfg.num_layers
+    dt = jnp.dtype(cfg.dtype)
+    kv = (nd, batch, cfg.num_kv_heads, seq, hd)
+    return {
+        "k": jax.ShapeDtypeStruct(kv, dt),
+        "v": jax.ShapeDtypeStruct(kv, dt),
+        "cross_k": jax.ShapeDtypeStruct(kv, dt),
+        "cross_v": jax.ShapeDtypeStruct(kv, dt),
+        "cross_len": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig) -> dict:
+    kv = P("layers", "batch", "kv_heads", "cache_seq", None)
+    return {"k": kv, "v": kv, "cross_k": kv, "cross_v": kv, "cross_len": P()}
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_shape(cfg, batch, seq)
+    )
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    x = x + params["dec_pos"][pos][None, None].astype(x.dtype)
+
+    def scan_body(x, inp):
+        blk, kc, vc, ck, cv = inp
+        h = _ln(x, blk["ln1"], cfg.norm_eps)
+        q, k, v = L.qkv_project(blk["self_attn"], h, cfg, pos[None, None])
+        kc = L.cache_insert(kc, k, pos)
+        vc = L.cache_insert(vc, v, pos)
+        attn = L.decode_attention(q, kc, vc, pos + 1)
+        x = x + L.attention_out(blk["self_attn"], attn, cfg)
+        # cross attention against precomputed encoder KV
+        h = _ln(x, blk["ln2"], cfg.norm_eps)
+        p = blk["cross_attn"]
+        b = x.shape[0]
+        hd = cfg.resolved_head_dim
+        q2 = jnp.einsum("bsd,dh->bsh", h, p["wq"].astype(x.dtype))
+        if cfg.qkv_bias:
+            q2 = q2 + p["bq"].astype(x.dtype)
+        q2 = q2.reshape(b, 1, cfg.num_heads, hd)
+        attn2 = L.decode_attention(q2, ck, cv, cache["cross_len"])
+        x = x + L.attention_out(p, attn2, cfg)
+        h = _ln(x, blk["ln3"], cfg.norm_eps)
+        x = x + L.gelu_mlp(blk["mlp"], h)
+        return x, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        scan_body,
+        x,
+        (params["dec_blocks"], cache["k"], cache["v"],
+         cache["cross_k"], cache["cross_v"]),
+    )
+    x = _ln(x, params["dec_ln_f"], cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], x, cfg)
+    return logits[:, 0], {
+        "k": k_new, "v": v_new,
+        "cross_k": cache["cross_k"], "cross_v": cache["cross_v"],
+        "cross_len": cache["cross_len"],
+    }
+
+
+def prefill(params, cfg: ModelConfig, batch: dict) -> jnp.ndarray:
+    """Encoder + full decoder pass; returns last-position logits."""
+    enc_out = encode(params, cfg, batch["frame_embeds"])
+    x = decode_train(params, cfg, batch["tokens"], enc_out)
+    return L.lm_logits(params["embed"], x[:, -1:], cfg)[:, 0]
+
+
+def build_cross_cache(params, cfg: ModelConfig, enc_out: jnp.ndarray,
+                      pad_to: int = 0):
+    """Precompute per-layer cross-attention K/V from encoder output
+    (heads-major layout).  Serving runs this once per request after encode."""
+    b, s_enc, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    s_out = max(s_enc, pad_to)
+
+    def one_layer(blk):
+        p = blk["cross_attn"]
+        dt = enc_out.dtype
+        k = jnp.einsum("bsd,dh->bsh", enc_out, p["wk"].astype(dt))
+        v = jnp.einsum("bsd,dh->bsh", enc_out, p["wv"].astype(dt))
+        if cfg.qkv_bias:
+            k, v = k + p["bk"].astype(dt), v + p["bv"].astype(dt)
+        k = k.reshape(b, s_enc, cfg.num_kv_heads, hd).swapaxes(1, 2)
+        v = v.reshape(b, s_enc, cfg.num_kv_heads, hd).swapaxes(1, 2)
+        pad = [(0, 0), (0, 0), (0, s_out - s_enc), (0, 0)]
+        return jnp.pad(k, pad), jnp.pad(v, pad)
+
+    ks, vs = jax.vmap(one_layer)(params["dec_blocks"])
+    return ks, vs

@@ -1,0 +1,300 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM (matrix memory, exponential gating,
+max-stabilized) and recurrent sLSTM (scalar memory).
+
+The mLSTM chunked scan shares its skeleton with the Mamba2 SSD scan (both are
+decayed linear attention); the sLSTM is a true recurrence evaluated with
+``lax.scan`` over time.  Layout: super-blocks of [1 sLSTM + (r-1) mLSTM]
+where r = cfg.slstm_every (r=0 -> all mLSTM).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+MIN_LOG = -30.0
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    di = cfg.ssm_expand * cfg.d_model
+    h = cfg.num_heads
+    return di, h, di // h
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig, lead: Tuple[int, ...]) -> dict:
+    d = cfg.d_model
+    di, h, dh = dims(cfg)
+    ks = jax.random.split(key, 8)
+    ax = len(lead)
+    return {
+        "ln": jnp.zeros((*lead, d), jnp.float32),
+        "up": L.dense_init(ks[0], (*lead, d, 2 * di), in_axis=ax),
+        "conv_w": L.dense_init(ks[1], (*lead, di, cfg.ssm_conv), in_axis=ax + 1),
+        "conv_b": jnp.zeros((*lead, di), jnp.float32),
+        "wq": L.dense_init(ks[2], (*lead, di, di), in_axis=ax),
+        "wk": L.dense_init(ks[3], (*lead, di, di), in_axis=ax),
+        "wv": L.dense_init(ks[4], (*lead, di, di), in_axis=ax),
+        "w_i": L.dense_init(ks[5], (*lead, di, h), in_axis=ax),
+        "b_i": jnp.full((*lead, h), -3.0, jnp.float32),
+        "w_f": L.dense_init(ks[6], (*lead, di, h), in_axis=ax),
+        "b_f": jnp.full((*lead, h), 3.0, jnp.float32),  # open forget gate
+        "norm": jnp.zeros((*lead, di), jnp.float32),
+        "down": L.dense_init(ks[7], (*lead, di, d), in_axis=ax),
+    }
+
+
+def mlstm_specs(lead: Tuple[str, ...]) -> dict:
+    return {
+        "ln": P(*lead, "embed"),
+        "up": P(*lead, "embed_fsdp", "conv_dim"),
+        "conv_w": P(*lead, "conv_dim", None),
+        "conv_b": P(*lead, "conv_dim"),
+        "wq": P(*lead, "embed_fsdp", "conv_dim"),
+        "wk": P(*lead, "embed_fsdp", "conv_dim"),
+        "wv": P(*lead, "embed_fsdp", "conv_dim"),
+        "w_i": P(*lead, "conv_dim", "ssm_heads"),
+        "b_i": P(*lead, "ssm_heads"),
+        "w_f": P(*lead, "conv_dim", "ssm_heads"),
+        "b_f": P(*lead, "ssm_heads"),
+        "norm": P(*lead, "conv_dim"),
+        "down": P(*lead, "conv_dim", "embed_fsdp"),
+    }
+
+
+def _causal_conv(x, w, b):
+    k = w.shape[-1]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(
+        pad[:, i : i + x.shape[1], :] * w[None, None, :, k - 1 - i].astype(x.dtype)
+        for i in range(k)
+    )
+    return y + b.astype(x.dtype)
+
+
+def _mlstm_inputs(blk: dict, x: jnp.ndarray, cfg: ModelConfig):
+    """Shared projections: returns q,k,v (B,S,H,dh), gate logits (B,S,H), z."""
+    b, s, _ = x.shape
+    di, h, dh = dims(cfg)
+    hidden = L.rms_norm(x, blk["ln"], cfg.norm_eps)
+    up = jnp.einsum("bsd,dp->bsp", hidden, blk["up"].astype(x.dtype))
+    xm, z = up[..., :di], up[..., di:]
+    xc = jax.nn.silu(
+        _causal_conv(xm, blk["conv_w"], blk["conv_b"]).astype(jnp.float32)
+    ).astype(x.dtype)
+    q = jnp.einsum("bsp,pq->bsq", xc, blk["wq"].astype(x.dtype))
+    k = jnp.einsum("bsp,pq->bsq", xc, blk["wk"].astype(x.dtype))
+    v = jnp.einsum("bsp,pq->bsq", xm, blk["wv"].astype(x.dtype))
+    q = q.reshape(b, s, h, dh) / jnp.sqrt(jnp.float32(dh)).astype(x.dtype)
+    k = k.reshape(b, s, h, dh)
+    v = v.reshape(b, s, h, dh)
+    i_log = (jnp.einsum("bsp,ph->bsh", xm, blk["w_i"].astype(x.dtype))
+             .astype(jnp.float32) + blk["b_i"])
+    f_raw = (jnp.einsum("bsp,ph->bsh", xm, blk["w_f"].astype(x.dtype))
+             .astype(jnp.float32) + blk["b_f"])
+    logf = jax.nn.log_sigmoid(f_raw)
+    return q, k, v, i_log, logf, z
+
+
+def _mlstm_out(blk, h_seq, z, x, cfg):
+    b, s = x.shape[0], x.shape[1]
+    di = h_seq.shape[-2] * h_seq.shape[-1]
+    flat = h_seq.reshape(b, s, di).astype(x.dtype)
+    y = L.rms_norm(flat, blk["norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return x + jnp.einsum("bsp,pd->bsd", y, blk["down"].astype(x.dtype))
+
+
+def mlstm_block(blk: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Full-sequence chunkwise mLSTM block.  x: (B, S, D)."""
+    b, s, _ = x.shape
+    di, h, dh = dims(cfg)
+    q, k, v, i_log, logf, z = _mlstm_inputs(blk, x, cfg)
+    q_chunk = min(cfg.ssm_chunk, s)
+    if s % q_chunk:
+        q_chunk = s
+    nc = s // q_chunk
+
+    def chunk_fn(carry, inp):
+        c_in, n_in, m_in = carry             # (B,H,N,P), (B,H,N), (B,H)
+        qc, kc, vc, ic, fc = inp             # (B,Q,H,*) fp32 gates
+        fq = jnp.cumsum(fc, axis=1)          # (B,Q,H) inclusive log-decay
+        f_total = fq[:, -1]                  # (B,H)
+        # log-weights of each key at chunk end and of state at queries
+        b_t = f_total[:, None] - fq + ic     # (B,Q,H)
+        a_q = fq + m_in[:, None]             # (B,Q,H) state decay at queries
+        # intra-chunk pair decays d_qt = F_q - F_t + i_t  (t <= q)
+        d_qt = fq[:, :, None, :] - fq[:, None, :, :] + ic[:, None, :, :]
+        tpos = jnp.arange(qc.shape[1])
+        causal = (tpos[:, None] >= tpos[None, :])[None, :, :, None]
+        d_qt = jnp.where(causal, d_qt, MIN_LOG)
+        m_q = jnp.maximum(a_q, d_qt.max(axis=2))           # (B,Q,H)
+        # intra attention weights and kq products
+        w_qt = jnp.exp(d_qt - m_q[:, :, None, :])          # (B,Q,T,H)
+        kq = jnp.einsum("bqhn,bthn->bqth", qc.astype(jnp.float32),
+                        kc.astype(jnp.float32))
+        num = jnp.einsum("bqth,bthp->bqhp", w_qt * kq, vc.astype(jnp.float32))
+        den = jnp.einsum("bqth,bqth->bqh", w_qt, kq)
+        # inter-chunk (initial state) contribution
+        w_state = jnp.exp(a_q - m_q)                       # (B,Q,H)
+        cq = jnp.einsum("bhnp,bqhn->bqhp", c_in, qc.astype(jnp.float32))
+        nq = jnp.einsum("bhn,bqhn->bqh", n_in, qc.astype(jnp.float32))
+        num = num + w_state[..., None] * cq
+        den = den + w_state * nq
+        h_out = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_q))[..., None]
+        # carry update (stabilized)
+        m_next = jnp.maximum(f_total + m_in, b_t.max(axis=1))
+        w_keys = jnp.exp(b_t - m_next[:, None])            # (B,Q,H)
+        scale = jnp.exp(f_total + m_in - m_next)           # (B,H)
+        c_out = scale[:, :, None, None] * c_in + jnp.einsum(
+            "bthn,bthp,bth->bhnp", kc.astype(jnp.float32),
+            vc.astype(jnp.float32), w_keys)
+        n_out = scale[:, :, None] * n_in + jnp.einsum(
+            "bthn,bth->bhn", kc.astype(jnp.float32), w_keys)
+        return (c_out, n_out, m_next), h_out
+
+    rc = lambda t: t.reshape(b, nc, q_chunk, *t.shape[2:]).swapaxes(0, 1)
+    carry0 = (
+        jnp.zeros((b, h, dh, dh), jnp.float32),
+        jnp.zeros((b, h, dh), jnp.float32),
+        jnp.full((b, h), MIN_LOG, jnp.float32),
+    )
+    _, h_chunks = jax.lax.scan(
+        chunk_fn, carry0, (rc(q), rc(k), rc(v), rc(i_log), rc(logf))
+    )
+    h_seq = h_chunks.swapaxes(0, 1).reshape(b, s, h, dh)
+    return _mlstm_out(blk, h_seq, z, x, cfg)
+
+
+def mlstm_decode_block(blk, x, c_in, n_in, m_in, conv_state, cfg):
+    """O(1) decode.  x (B,1,D); states (B,H,N,P)/(B,H,N)/(B,H)."""
+    b = x.shape[0]
+    di, h, dh = dims(cfg)
+    hidden = L.rms_norm(x, blk["ln"], cfg.norm_eps)
+    up = jnp.einsum("bsd,dp->bsp", hidden, blk["up"].astype(x.dtype))
+    xm, z = up[..., :di], up[..., di:]
+    full = jnp.concatenate([conv_state, xm], axis=1)
+    conv = jnp.einsum("bkc,ck->bc", full, blk["conv_w"][:, ::-1].astype(x.dtype))
+    xc = jax.nn.silu((conv + blk["conv_b"].astype(x.dtype)).astype(jnp.float32))
+    xc = xc.astype(x.dtype)[:, None]
+    new_conv = full[:, 1:]
+    q = jnp.einsum("bsp,pq->bsq", xc, blk["wq"].astype(x.dtype))
+    k = jnp.einsum("bsp,pq->bsq", xc, blk["wk"].astype(x.dtype))
+    v = jnp.einsum("bsp,pq->bsq", xm, blk["wv"].astype(x.dtype))
+    q = (q.reshape(b, h, dh) / jnp.sqrt(jnp.float32(dh)).astype(x.dtype)
+         ).astype(jnp.float32)
+    k = k.reshape(b, h, dh).astype(jnp.float32)
+    v = v.reshape(b, h, dh).astype(jnp.float32)
+    i_log = (jnp.einsum("bsp,ph->bsh", xm, blk["w_i"].astype(x.dtype))
+             .astype(jnp.float32) + blk["b_i"])[:, 0]
+    logf = jax.nn.log_sigmoid(
+        (jnp.einsum("bsp,ph->bsh", xm, blk["w_f"].astype(x.dtype))
+         .astype(jnp.float32) + blk["b_f"])[:, 0]
+    )
+    m_next = jnp.maximum(logf + m_in, i_log)
+    f_w = jnp.exp(logf + m_in - m_next)
+    i_w = jnp.exp(i_log - m_next)
+    c_out = f_w[:, :, None, None] * c_in + i_w[:, :, None, None] * (
+        k[:, :, :, None] * v[:, :, None, :]
+    )
+    n_out = f_w[:, :, None] * n_in + i_w[:, :, None] * k
+    num = jnp.einsum("bhnp,bhn->bhp", c_out, q)
+    den = jnp.einsum("bhn,bhn->bh", n_out, q)
+    h_t = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_next))[..., None]
+    out = _mlstm_out(blk, h_t[:, None], z, x, cfg)
+    return out, c_out, n_out, m_next, new_conv
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig, lead: Tuple[int, ...]) -> dict:
+    d = cfg.d_model
+    di, h, dh = dims(cfg)
+    ks = jax.random.split(key, 4)
+    ax = len(lead)
+    return {
+        "ln": jnp.zeros((*lead, d), jnp.float32),
+        "w_in": L.dense_init(ks[0], (*lead, d, 4 * di), in_axis=ax),
+        "r": L.dense_init(ks[1], (*lead, h, dh, 4 * dh), in_axis=ax + 1) * 0.1,
+        "b": jnp.concatenate(
+            [
+                jnp.full((*lead, di), -3.0),   # i
+                jnp.full((*lead, di), 3.0),    # f
+                jnp.zeros((*lead, di)),        # z
+                jnp.zeros((*lead, di)),        # o
+            ],
+            axis=-1,
+        ).astype(jnp.float32),
+        "norm": jnp.zeros((*lead, di), jnp.float32),
+        "down": L.dense_init(ks[2], (*lead, di, d), in_axis=ax),
+    }
+
+
+def slstm_specs(lead: Tuple[str, ...]) -> dict:
+    return {
+        "ln": P(*lead, "embed"),
+        "w_in": P(*lead, "embed_fsdp", "conv_dim"),
+        "r": P(*lead, "ssm_heads", None, None),
+        "b": P(*lead, "conv_dim"),
+        "norm": P(*lead, "conv_dim"),
+        "down": P(*lead, "conv_dim", "embed_fsdp"),
+    }
+
+
+def _slstm_cell(blk, wx_t, state, cfg):
+    """One recurrence step. wx_t: (B, 4*di); state: (c, n, h, m) each (B, di)."""
+    di, h, dh = dims(cfg)
+    c, n, hid, m = state
+    b_sz = wx_t.shape[0]
+    hr = hid.reshape(b_sz, h, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hr, blk["r"].astype(hid.dtype))
+    raw = wx_t + rec.reshape(b_sz, 4 * di) + blk["b"].astype(wx_t.dtype)
+    raw = raw.astype(jnp.float32)
+    i_r, f_r, z_r, o_r = jnp.split(raw, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(f_r)
+    m_next = jnp.maximum(logf + m, i_r)
+    i_w = jnp.exp(i_r - m_next)
+    f_w = jnp.exp(logf + m - m_next)
+    c_next = f_w * c + i_w * jnp.tanh(z_r)
+    n_next = f_w * n + i_w
+    h_next = jax.nn.sigmoid(o_r) * c_next / jnp.maximum(n_next, 1e-6)
+    return c_next, n_next, h_next, m_next
+
+
+def slstm_block(blk: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Recurrent sLSTM block over the full sequence (lax.scan over time)."""
+    b, s, _ = x.shape
+    di, _, _ = dims(cfg)
+    hidden = L.rms_norm(x, blk["ln"], cfg.norm_eps)
+    wx = jnp.einsum("bsd,dp->bsp", hidden, blk["w_in"].astype(x.dtype))
+    state0 = tuple(
+        jnp.zeros((b, di), jnp.float32) for _ in range(3)
+    ) + (jnp.full((b, di), MIN_LOG, jnp.float32),)
+
+    def step(state, wx_t):
+        new = _slstm_cell(blk, wx_t, state, cfg)
+        return new, new[2]
+
+    _, h_seq = jax.lax.scan(step, state0, wx.swapaxes(0, 1))
+    h_seq = h_seq.swapaxes(0, 1).astype(x.dtype)           # (B,S,di)
+    y = L.rms_norm(h_seq, blk["norm"], cfg.norm_eps)
+    return x + jnp.einsum("bsp,pd->bsd", y, blk["down"].astype(x.dtype))
+
+
+def slstm_decode_block(blk, x, state, cfg):
+    hidden = L.rms_norm(x, blk["ln"], cfg.norm_eps)
+    wx = jnp.einsum("bsd,dp->bsp", hidden, blk["w_in"].astype(x.dtype))[:, 0]
+    new = _slstm_cell(blk, wx, state, cfg)
+    y = L.rms_norm(new[2][:, None].astype(x.dtype), blk["norm"], cfg.norm_eps)
+    out = x + jnp.einsum("bsp,pd->bsd", y, blk["down"].astype(x.dtype))
+    return out, new

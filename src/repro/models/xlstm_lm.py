@@ -1,0 +1,162 @@
+"""xLSTM language model: super-blocks of [1 sLSTM + (r-1) mLSTM]."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import xlstm as X
+
+
+def _grouping(cfg: ModelConfig) -> Tuple[int, int]:
+    r = cfg.slstm_every
+    if r <= 0:
+        return 1, cfg.num_layers  # one group of all-mLSTM
+    assert cfg.num_layers % r == 0, "num_layers must divide by slstm_every"
+    return cfg.num_layers // r, r - 1  # (groups, mlstm per group)
+
+
+def init_params(key, cfg: ModelConfig, max_seq: int = 0) -> dict:
+    del max_seq
+    g, m_per = _grouping(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "embed": L.init_embedding(ks[0], cfg),
+        "mlstm": X.init_mlstm(ks[1], cfg, lead=(g, m_per)),
+        "ln_f": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if cfg.slstm_every > 0:
+        p["slstm"] = X.init_slstm(ks[2], cfg, lead=(g,))
+    return p
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    s = {
+        "embed": L.embedding_specs(cfg),
+        "mlstm": X.mlstm_specs(("layers", None)),
+        "ln_f": P("embed"),
+    }
+    if cfg.slstm_every > 0:
+        s["slstm"] = X.slstm_specs(("layers",))
+    return s
+
+
+def _remat(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat != "none" else fn
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    mblock = _remat(functools.partial(X.mlstm_block, cfg=cfg), cfg)
+    sblock = _remat(functools.partial(X.slstm_block, cfg=cfg), cfg)
+
+    def group(x, blk):
+        if cfg.slstm_every > 0:
+            x = sblock(blk["s"], x)
+
+        def inner(x, mb):
+            return mblock(mb, x), None
+
+        x, _ = jax.lax.scan(inner, x, blk["m"])
+        return x, None
+
+    blks = {"m": params["mlstm"]}
+    if cfg.slstm_every > 0:
+        blks["s"] = params["slstm"]
+    x, _ = jax.lax.scan(group, x, blks)
+    return L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict) -> jnp.ndarray:
+    x = forward(params, cfg, batch["tokens"])
+    logits = L.lm_logits(params["embed"], x, cfg)
+    return L.cross_entropy_loss(logits, batch["labels"], batch.get("loss_mask"))
+
+
+# ---------------------------------------------------------------------------
+# Serving — constant-size recurrent state (sub-quadratic: long_500k capable)
+# ---------------------------------------------------------------------------
+
+def cache_shape(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    del seq  # state size is independent of context length
+    g, m_per = _grouping(cfg)
+    di, h, dh = X.dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    c = {
+        "m_c": jax.ShapeDtypeStruct((g, m_per, batch, h, dh, dh), jnp.float32),
+        "m_n": jax.ShapeDtypeStruct((g, m_per, batch, h, dh), jnp.float32),
+        "m_m": jax.ShapeDtypeStruct((g, m_per, batch, h), jnp.float32),
+        "m_conv": jax.ShapeDtypeStruct((g, m_per, batch, cfg.ssm_conv - 1, di), dt),
+    }
+    if cfg.slstm_every > 0:
+        for name in ("s_c", "s_n", "s_h", "s_m"):
+            c[name] = jax.ShapeDtypeStruct((g, batch, di), jnp.float32)
+    return c
+
+
+def cache_specs(cfg: ModelConfig) -> dict:
+    s = {
+        "m_c": P("layers", None, "batch", "ssm_heads", None, None),
+        "m_n": P("layers", None, "batch", "ssm_heads", None),
+        "m_m": P("layers", None, "batch", "ssm_heads"),
+        "m_conv": P("layers", None, "batch", None, "conv_dim"),
+    }
+    if cfg.slstm_every > 0:
+        for name in ("s_c", "s_n", "s_h", "s_m"):
+            s[name] = P("layers", "batch", "conv_dim")
+    return s
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    shapes = cache_shape(cfg, batch, seq)
+    init = {k: jnp.zeros(v.shape, v.dtype) for k, v in shapes.items()}
+    for name in ("m_m", "s_m"):
+        if name in init:
+            init[name] = jnp.full(init[name].shape, X.MIN_LOG, jnp.float32)
+    return init
+
+
+def decode_step(params, cfg: ModelConfig, cache: dict, tokens, pos):
+    del pos  # recurrent state; no positional bookkeeping needed
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    has_s = cfg.slstm_every > 0
+
+    def group(x, blk_cache):
+        blk, cch = blk_cache
+        out_c = dict(cch)
+        if has_s:
+            state = (cch["s_c"], cch["s_n"], cch["s_h"], cch["s_m"])
+            x, new = X.slstm_decode_block(blk["s"], x, state, cfg)
+            out_c.update(
+                {"s_c": new[0], "s_n": new[1], "s_h": new[2], "s_m": new[3]}
+            )
+
+        def inner(x, mb_cache):
+            mb, mc = mb_cache
+            x, c, n, m, conv = X.mlstm_decode_block(
+                mb, x, mc["m_c"], mc["m_n"], mc["m_m"], mc["m_conv"], cfg
+            )
+            return x, {"m_c": c, "m_n": n, "m_m": m, "m_conv": conv}
+
+        m_cache = {k: cch[k] for k in ("m_c", "m_n", "m_m", "m_conv")}
+        x, new_m = jax.lax.scan(inner, x, (blk["m"], m_cache))
+        out_c.update(new_m)
+        return x, out_c
+
+    blks = {"m": params["mlstm"]}
+    if has_s:
+        blks["s"] = params["slstm"]
+    x, new_cache = jax.lax.scan(group, x, (blks, cache))
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], x, cfg)
+    return logits[:, 0], new_cache
+
+
+def prefill(params, cfg: ModelConfig, tokens) -> jnp.ndarray:
+    x = forward(params, cfg, tokens)
+    return L.lm_logits(params["embed"], x[:, -1:], cfg)[:, 0]

@@ -1,0 +1,199 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE weight-shared attention block
+applied every ``cfg.shared_attn_every`` layers (the zamba parameter-sharing
+trick).  Sub-quadratic in context for decode (SSM state is constant-size; the
+shared-attention KV caches grow linearly and are read once per token).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm
+
+
+def _grouping(cfg: ModelConfig) -> Tuple[int, int, int]:
+    e = cfg.shared_attn_every
+    g = cfg.num_layers // e
+    tail = cfg.num_layers - g * e
+    return g, e, tail
+
+
+def init_params(key, cfg: ModelConfig, max_seq: int = 0) -> dict:
+    del max_seq
+    g, e, tail = _grouping(cfg)
+    ks = jax.random.split(key, 6)
+    grouped = ssm.init_mamba(ks[0], cfg, layers=g * e)
+    p = {
+        "embed": L.init_embedding(ks[1], cfg),
+        "mamba": jax.tree.map(
+            lambda t: t.reshape(g, e, *t.shape[1:]), grouped
+        ),
+        "shared": {
+            "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+            "attn": L.init_attention(ks[2], cfg),
+            "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+            "mlp": L.init_mlp(ks[3], cfg.d_model, cfg.d_ff),
+        },
+        "ln_f": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if tail:
+        p["mamba_tail"] = ssm.init_mamba(ks[4], cfg, layers=tail)
+    return p
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    _, _, tail = _grouping(cfg)
+    mamba = ssm.mamba_specs(cfg, layers=True)
+    grouped = jax.tree.map(lambda s: P("layers", None, *tuple(s)[1:]), mamba)
+    s = {
+        "embed": L.embedding_specs(cfg),
+        "mamba": grouped,
+        "shared": {
+            "ln1": P("embed"),
+            "attn": L.attention_specs(cfg, layers=False),
+            "ln2": P("embed"),
+            "mlp": L.mlp_specs(layers=False),
+        },
+        "ln_f": P("embed"),
+    }
+    if tail:
+        s["mamba_tail"] = mamba
+    return s
+
+
+def _shared_attn_block(shared, x, cfg: ModelConfig, positions):
+    h = L.rms_norm(x, shared["ln1"], cfg.norm_eps)
+    q, k, v = L.qkv_project(shared["attn"], h, cfg, positions)
+    attn = L.blockwise_attention(q, k, v, causal=True)
+    x = x + L.attention_out(shared["attn"], attn, cfg)
+    h = L.rms_norm(x, shared["ln2"], cfg.norm_eps)
+    return x + L.gated_mlp(shared["mlp"], h)
+
+
+def _remat(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat != "none" else fn
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    positions = jnp.arange(x.shape[1])[None, :]
+    mblock = _remat(functools.partial(ssm.mamba_block, cfg=cfg), cfg)
+    ablock = _remat(
+        functools.partial(_shared_attn_block, cfg=cfg, positions=positions), cfg
+    )
+
+    def group(x, mamba_g):
+        def inner(x, mb):
+            return mblock(mb, x), None
+
+        x, _ = jax.lax.scan(inner, x, mamba_g)
+        # the SAME shared params every application (closure, not scanned)
+        return ablock(params["shared"], x), None
+
+    x, _ = jax.lax.scan(group, x, params["mamba"])
+    if "mamba_tail" in params:
+        def inner_t(x, mb):
+            return mblock(mb, x), None
+
+        x, _ = jax.lax.scan(inner_t, x, params["mamba_tail"])
+    return L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict) -> jnp.ndarray:
+    x = forward(params, cfg, batch["tokens"])
+    logits = L.lm_logits(params["embed"], x, cfg)
+    return L.cross_entropy_loss(logits, batch["labels"], batch.get("loss_mask"))
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def cache_shape(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    g, e, tail = _grouping(cfg)
+    m = ssm.mamba_cache_shape(cfg, g * e + tail, batch)
+    kv = (g, batch, cfg.num_kv_heads, seq, cfg.resolved_head_dim)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "ssm": m["ssm"],
+        "conv": m["conv"],
+        "k": jax.ShapeDtypeStruct(kv, dt),
+        "v": jax.ShapeDtypeStruct(kv, dt),
+    }
+
+
+def cache_specs(cfg: ModelConfig) -> dict:
+    m = ssm.mamba_cache_specs()
+    kv = P("layers", "batch", "kv_heads", "cache_seq", None)
+    return {"ssm": m["ssm"], "conv": m["conv"], "k": kv, "v": kv}
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_shape(cfg, batch, seq)
+    )
+
+
+def decode_step(params, cfg: ModelConfig, cache: dict, tokens, pos):
+    g, e, tail = _grouping(cfg)
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    ssm_g = cache["ssm"][: g * e].reshape(g, e, *cache["ssm"].shape[1:])
+    conv_g = cache["conv"][: g * e].reshape(g, e, *cache["conv"].shape[1:])
+
+    def group(x, inp):
+        mamba_g, ssm_state, conv_state, kc, vc = inp
+
+        def inner(x, blk_state):
+            mb, st, cv = blk_state
+            x, st2, cv2 = ssm.mamba_decode_block(mb, x, st, cv, cfg)
+            return x, (st2, cv2)
+
+        x, (ssm2, conv2) = jax.lax.scan(
+            inner, x, (mamba_g, ssm_state, conv_state)
+        )
+        # shared attention application (decode form)
+        shared = params["shared"]
+        h = L.rms_norm(x, shared["ln1"], cfg.norm_eps)
+        q, k, v = L.qkv_project(shared["attn"], h, cfg, pos[None, None])
+        kc = L.cache_insert(kc, k, pos)
+        vc = L.cache_insert(vc, v, pos)
+        attn = L.decode_attention(q, kc, vc, pos + 1)
+        x = x + L.attention_out(shared["attn"], attn, cfg)
+        h2 = L.rms_norm(x, shared["ln2"], cfg.norm_eps)
+        x = x + L.gated_mlp(shared["mlp"], h2)
+        return x, (ssm2, conv2, kc, vc)
+
+    x, (ssm_new, conv_new, k_new, v_new) = jax.lax.scan(
+        group, x, (params["mamba"], ssm_g, conv_g, cache["k"], cache["v"])
+    )
+    ssm_all = ssm_new.reshape(g * e, *ssm_new.shape[2:])
+    conv_all = conv_new.reshape(g * e, *conv_new.shape[2:])
+    if tail:
+        def inner_t(x, blk_state):
+            mb, st, cv = blk_state
+            x, st2, cv2 = ssm.mamba_decode_block(mb, x, st, cv, cfg)
+            return x, (st2, cv2)
+
+        x, (ssm_t, conv_t) = jax.lax.scan(
+            inner_t,
+            x,
+            (params["mamba_tail"], cache["ssm"][g * e :], cache["conv"][g * e :]),
+        )
+        ssm_all = jnp.concatenate([ssm_all, ssm_t])
+        conv_all = jnp.concatenate([conv_all, conv_t])
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], x, cfg)
+    return logits[:, 0], {
+        "ssm": ssm_all, "conv": conv_all, "k": k_new, "v": v_new
+    }
+
+
+def prefill(params, cfg: ModelConfig, tokens) -> jnp.ndarray:
+    x = forward(params, cfg, tokens)
+    return L.lm_logits(params["embed"], x[:, -1:], cfg)[:, 0]

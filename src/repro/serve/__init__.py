@@ -1,0 +1,1 @@
+"""Serving substrate: batched KV-cache engine + approximate Top-K heads."""

@@ -1,0 +1,105 @@
+"""Batched serving engine: prefill + incremental decode over a KV/state cache.
+
+Requests are served in fixed batch slots (sized by the deployment shape); the
+decode step is one jitted function over the whole batch.  Optionally the
+sampling head is the paper's ApproxTopKHead (sparsified vocab embedding +
+partitioned Top-K SpMV) instead of the dense argmax.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model_zoo import get_model
+from repro.serve.topk_head import ApproxTopKHead, TopKHeadConfig
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: List[int]
+    steps: int
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        batch_size: int,
+        max_seq: int,
+        use_approx_head: bool = False,
+        head_cfg: Optional[TopKHeadConfig] = None,
+    ):
+        self.cfg = cfg
+        self.api = get_model(cfg)
+        self.params = params
+        self.batch_size = batch_size
+        self.max_seq = max_seq
+        self._decode = jax.jit(self.api.decode_step)
+        self._decode_hidden = None
+        self.head: Optional[ApproxTopKHead] = None
+        if use_approx_head:
+            emb = np.asarray(params["embed"]["tok"])[: cfg.vocab_size]
+            self.head = ApproxTopKHead(emb, head_cfg)
+
+    def new_cache(self):
+        return self.api.init_cache(self.batch_size, self.max_seq)
+
+    def prefill_tokens(self, tokens: np.ndarray):
+        """Feed a prompt through decode steps to fill the cache.
+
+        (Incremental prefill keeps one compiled decode fn; the bulk prefill
+        path is exercised separately by the prefill_32k dry-run cell.)
+        """
+        cache = self.new_cache()
+        logits = None
+        for t in range(tokens.shape[1]):
+            logits, cache = self._decode(
+                self.params, cache, jnp.asarray(tokens[:, t : t + 1]),
+                jnp.int32(t),
+            )
+        return logits, cache, tokens.shape[1]
+
+    def decode_hidden(self, cache, tokens, pos):
+        """Decode one step returning final hidden states (dense/moe/vlm only);
+        sampling then goes through the paper's ApproxTopKHead instead of the
+        V x D logits matmul."""
+        from repro.models import transformer
+
+        if self._decode_hidden is None:
+            self._decode_hidden = jax.jit(
+                lambda p, c, t, q: transformer.decode_step(
+                    p, self.cfg, c, t, q, return_hidden=True
+                )
+            )
+        return self._decode_hidden(self.params, cache, tokens, pos)
+
+    def sample_approx(self, hidden: np.ndarray) -> np.ndarray:
+        """Greedy sample via the approximate head. hidden: (B, D)."""
+        assert self.head is not None
+        return np.asarray(
+            [int(self.head.topk_logits(h)[1][0]) for h in np.asarray(hidden)]
+        )
+
+    def generate(
+        self, prompt: np.ndarray, num_steps: int, greedy: bool = True
+    ) -> GenerationResult:
+        """prompt: (B, S0) int32; returns (B, num_steps) generated tokens."""
+        logits, cache, pos = self.prefill_tokens(prompt)
+        outs = []
+        tok = np.asarray(jnp.argmax(logits, axis=-1))[:, None]
+        for i in range(num_steps):
+            outs.append(tok)
+            logits, cache = self._decode(
+                self.params, cache, jnp.asarray(tok, jnp.int32),
+                jnp.int32(pos + i),
+            )
+            tok = np.asarray(jnp.argmax(logits, axis=-1))[:, None]
+        return GenerationResult(
+            tokens=np.concatenate(outs, axis=1), steps=num_steps
+        )

@@ -1,0 +1,8 @@
+"""Logical-axis sharding rules for the production mesh."""
+from repro.sharding.rules import (
+    ShardingRules,
+    DEFAULT_RULES,
+    logical_to_spec,
+    shard_params,
+    constrain,
+)

@@ -1,0 +1,192 @@
+"""Logical axis -> mesh axis mapping with divisibility fallback (MaxText-style).
+
+Every parameter / activation dimension is named with a *logical* axis; the
+rules table maps logical axes to mesh axes.  If a dimension is not divisible
+by the mapped mesh-axis size the mapping is dropped for that tensor (the
+fallback keeps e.g. smollm's 15 heads compiling on a 16-way model axis by
+replicating attention weights while the MLP stays sharded — DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+LogicalAxis = Optional[str]
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Mapping from logical axis names to mesh axis names."""
+
+    rules: Tuple[Tuple[str, MeshAxes], ...]
+
+    def lookup(self, logical: LogicalAxis) -> MeshAxes:
+        if logical is None:
+            return None
+        for name, target in self.rules:
+            if name == logical:
+                return target
+        return None
+
+    def replace(self, **overrides: MeshAxes) -> "ShardingRules":
+        new = dict(self.rules)
+        new.update(overrides)
+        return ShardingRules(tuple(new.items()))
+
+
+# Production defaults: batch is pure DP over (pod, data); weights are
+# FSDP-sharded over "data" on their input/embed dim and tensor-sharded over
+# "model" on heads/mlp/vocab/experts dims; optimizer state follows params.
+DEFAULT_RULES = ShardingRules(
+    rules=(
+        ("batch", ("pod", "data")),
+        ("seq", None),
+        # decode caches: kv_heads (earlier dim) takes "model" when divisible;
+        # otherwise the seq dim picks the axis up (greedy per-tensor dedup) —
+        # either way the cache is never replicated on the model axis (§Perf B)
+        ("cache_seq", "model"),
+        ("embed", None),           # activations: d_model replicated
+        ("embed_fsdp", "data"),    # weights: d_model dim sharded (ZeRO-3/FSDP)
+        ("heads", "model"),
+        ("kv_heads", "model"),
+        ("mlp", "model"),
+        ("vocab", "model"),
+        # experts take the model axis when divisible (EP); otherwise the
+        # greedy per-tensor dedup lets expert_mlp pick the axis up instead
+        # (TP inside each expert) — without this, mixtral's 8 experts on a
+        # 16-way axis silently replicate all expert FFN compute (§Perf A).
+        ("experts", "model"),
+        ("expert_mlp", "model"),
+        # capacity-dim sharding is arch-dependent: archs whose expert count
+        # cannot take the model axis override this to ("pod", "data") so the
+        # (E, C, d) dispatch buffers aren't replicated (§Perf A, iter. A3)
+        ("expert_cap", None),
+        ("layers", None),
+        ("ssm_state", None),
+        ("ssm_heads", "model"),
+        ("conv_dim", "model"),
+    )
+)
+
+
+def _axis_size(mesh: Mesh, target: MeshAxes) -> int:
+    if target is None:
+        return 1
+    if isinstance(target, str):
+        return mesh.shape.get(target, 1)
+    size = 1
+    for t in target:
+        size *= mesh.shape.get(t, 1)
+    return size
+
+
+def _present(mesh: Mesh, target: MeshAxes) -> MeshAxes:
+    """Drop mesh axes that don't exist in this mesh (e.g. 'pod' single-pod)."""
+    if target is None:
+        return None
+    if isinstance(target, str):
+        return target if target in mesh.shape else None
+    kept = tuple(t for t in target if t in mesh.shape)
+    return kept if kept else None
+
+
+def logical_to_spec(
+    logical_dims: Sequence[LogicalAxis],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: ShardingRules = DEFAULT_RULES,
+) -> P:
+    """Build a PartitionSpec, dropping non-divisible / absent mappings."""
+    out = []
+    used: set = set()
+    for dim, logical in zip(shape, logical_dims):
+        target = _present(mesh, rules.lookup(logical))
+        if target is not None:
+            flat = (target,) if isinstance(target, str) else target
+            if any(t in used for t in flat):
+                target = None  # a mesh axis may shard only one dim
+        if target is not None and dim % _axis_size(mesh, target) != 0:
+            target = None  # divisibility fallback
+        if target is not None:
+            flat = (target,) if isinstance(target, str) else target
+            used.update(flat)
+        out.append(target)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def logical_sharding(
+    logical_dims: Sequence[LogicalAxis],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: ShardingRules = DEFAULT_RULES,
+) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(logical_dims, shape, mesh, rules))
+
+
+def shard_params(
+    params: Any, specs: Any, mesh: Mesh, rules: ShardingRules = DEFAULT_RULES
+) -> Any:
+    """Tree of NamedShardings for a (params, logical-specs) tree pair.
+
+    ``specs`` leaves are PartitionSpec objects carrying *logical* names, e.g.
+    ``P('layers', 'embed_fsdp', 'mlp')``; they are resolved per-tensor against
+    the mesh with divisibility fallback.
+    """
+    return jax.tree.map(
+        lambda p, s: logical_sharding(tuple(s), p.shape, mesh, rules),
+        params,
+        specs,
+    )
+
+
+_ACTIVE_RULES = [DEFAULT_RULES]
+
+
+class use_rules:
+    """Context manager scoping the rules consulted by in-model constrain()
+    calls — how per-arch sharding_overrides reach with_sharding_constraint."""
+
+    def __init__(self, rules: ShardingRules):
+        self.rules = rules
+
+    def __enter__(self):
+        _ACTIVE_RULES.append(self.rules)
+        return self.rules
+
+    def __exit__(self, *exc):
+        _ACTIVE_RULES.pop()
+        return False
+
+
+def active_rules() -> ShardingRules:
+    return _ACTIVE_RULES[-1]
+
+
+def constrain(
+    x: jax.Array,
+    logical_dims: Sequence[LogicalAxis],
+    mesh: Optional[Mesh] = None,
+    rules: Optional[ShardingRules] = None,
+):
+    """with_sharding_constraint by logical dims; no-op outside a mesh context."""
+    mesh = mesh or _current_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    rules = rules or active_rules()
+    return jax.lax.with_sharding_constraint(
+        x, logical_sharding(logical_dims, x.shape, mesh, rules)
+    )
+
+
+def _current_mesh() -> Optional[Mesh]:
+    try:
+        env = jax._src.mesh.thread_resources.env  # physical mesh context
+        return env.physical_mesh
+    except Exception:  # pragma: no cover - defensive
+        return None

@@ -1,0 +1,123 @@
+"""Fault-tolerant checkpointing: msgpack+zstd, atomic rename, retention,
+async save, and *elastic* restore (checkpoints store unsharded logical arrays;
+restore re-shards onto whatever mesh the restarted job brings up)."""
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def serialize(tree: Any) -> bytes:
+    leaves, _ = _flatten(tree)
+    payload = [
+        {
+            "dtype": str(np.asarray(x).dtype),
+            "shape": list(np.asarray(x).shape),
+            "data": np.ascontiguousarray(np.asarray(x)).tobytes(),
+        }
+        for x in leaves
+    ]
+    return zstandard.ZstdCompressor(level=3).compress(msgpack.packb(payload))
+
+
+def deserialize(blob: bytes, like: Any) -> Any:
+    payload = msgpack.unpackb(zstandard.ZstdDecompressor().decompress(blob))
+    leaves, treedef = _flatten(like)
+    if len(payload) != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(payload)} leaves, expected {len(leaves)} "
+            "(architecture mismatch?)"
+        )
+    new = [
+        np.frombuffer(p["data"], dtype=np.dtype(p["dtype"])).reshape(p["shape"])
+        for p in payload
+    ]
+    return jax.tree_util.tree_unflatten(treedef, new)
+
+
+class CheckpointManager:
+    """step-numbered checkpoints with retention + optional async writer."""
+
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.directory, f"ckpt_{step:08d}.msgpack.zst")
+
+    def save(self, step: int, state: Any) -> None:
+        # Materialize on host *before* handing off (donated buffers may die).
+        host_state = jax.tree.map(lambda x: np.asarray(x), state)
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_state), daemon=True
+            )
+            self._thread.start()
+        else:
+            self._write(step, host_state)
+
+    def _write(self, step: int, host_state: Any) -> None:
+        blob = serialize(host_state)
+        tmp = self._path(step) + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(blob)
+        os.replace(tmp, self._path(step))  # atomic publish
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep]:
+            try:
+                os.remove(self._path(s))
+            except OSError:
+                pass
+
+    def all_steps(self):
+        out = []
+        for f in os.listdir(self.directory):
+            if f.startswith("ckpt_") and f.endswith(".msgpack.zst"):
+                out.append(int(f[len("ckpt_") : len("ckpt_") + 8]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self, like: Any, step: Optional[int] = None, shardings: Any = None
+    ) -> Tuple[int, Any]:
+        """Load a checkpoint; re-shard onto ``shardings`` if given (elastic:
+        the restoring job's mesh may differ from the saving job's)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        with open(self._path(step), "rb") as f:
+            host = deserialize(f.read(), like)
+        if shardings is not None:
+            host = jax.tree.map(
+                lambda x, s: jax.device_put(jnp.asarray(x), s), host, shardings
+            )
+        return step, host

@@ -1,0 +1,62 @@
+"""Deterministic synthetic token pipeline.
+
+Batches are a pure function of (seed, step) — any host can regenerate any
+step's shard after a failover without coordination, and elastic restarts with
+a different mesh re-slice the same global batch (DESIGN.md §5 fault model).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def batch_for_step(
+    step: int, cfg: ModelConfig, shape: ShapeConfig, seed: int = 0,
+    microbatches: int = 1,
+) -> Dict[str, jnp.ndarray]:
+    """Global batch for one step (token LM: next-token prediction)."""
+    key = jax.random.fold_in(jax.random.key(seed), step)
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, jnp.ndarray] = {}
+
+    def synth_tokens(k, batch, length):
+        """Learnable sequences: arithmetic token walks with per-sequence
+        stride (inferable from context), plus 10% noise.  Uniform-random
+        tokens would pin the loss at ln(V) and hide optimizer regressions."""
+        k1, k2, k3 = jax.random.split(k, 3)
+        start = jax.random.randint(k1, (batch, 1), 0, cfg.vocab_size)
+        stride = jax.random.randint(k2, (batch, 1), 1, 5)
+        t = jnp.arange(length)[None, :]
+        toks = (start + stride * t) % cfg.vocab_size
+        noise = jax.random.bernoulli(k3, 0.1, (batch, length))
+        rand = jax.random.randint(k3, (batch, length), 0, cfg.vocab_size)
+        return jnp.where(noise, rand, toks)
+
+    if cfg.family == "vlm":
+        kp, kt = jax.random.split(key)
+        ft = cfg.frontend_tokens
+        out["prefix_embeds"] = (
+            jax.random.normal(kp, (b, ft, cfg.d_model), jnp.float32) * 0.02
+        ).astype(jnp.dtype(cfg.dtype))
+        toks = synth_tokens(kt, b, s - ft + 1)
+    elif cfg.family == "audio":
+        kp, kt = jax.random.split(key)
+        out["frame_embeds"] = (
+            jax.random.normal(kp, (b, s, cfg.d_model), jnp.float32) * 0.02
+        ).astype(jnp.dtype(cfg.dtype))
+        toks = synth_tokens(kt, b, s + 1)
+    else:
+        toks = synth_tokens(key, b, s + 1)
+    out["tokens"] = toks[:, :-1].astype(jnp.int32)
+    out["labels"] = toks[:, 1:].astype(jnp.int32)
+    if microbatches > 1:
+        out = jax.tree.map(
+            lambda t: t.reshape(microbatches, t.shape[0] // microbatches,
+                                *t.shape[1:]),
+            out,
+        )
+    return out

@@ -1,0 +1,60 @@
+"""Straggler / failure handling utilities for the training loop.
+
+On a real multi-pod deployment the failure modes are: (a) a host dies ->
+restart from latest checkpoint (possibly on fewer/more pods: elastic restore
+re-shards), (b) a step hangs on a bad collective / straggler -> the watchdog
+raises after ``timeout_s`` so the launcher can kill + restart, (c) data loss
+-> impossible by construction, batches are pure functions of (seed, step).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Optional
+
+
+class StepWatchdog:
+    """Raises (via callback) if a step exceeds the timeout — straggler guard."""
+
+    def __init__(self, timeout_s: float, on_timeout: Optional[Callable] = None):
+        self.timeout_s = timeout_s
+        self.on_timeout = on_timeout or self._default
+        self._timer: Optional[threading.Timer] = None
+        self.fired = False
+
+    def _default(self):
+        self.fired = True
+
+    def __enter__(self):
+        if self.timeout_s > 0:
+            self._timer = threading.Timer(self.timeout_s, self.on_timeout)
+            self._timer.daemon = True
+            self._timer.start()
+        return self
+
+    def __exit__(self, *exc):
+        if self._timer is not None:
+            self._timer.cancel()
+        return False
+
+
+class StepTimer:
+    """Rolling step-time stats; flags outlier steps (soft straggler signal)."""
+
+    def __init__(self, window: int = 20, outlier_factor: float = 3.0):
+        self.window = window
+        self.outlier_factor = outlier_factor
+        self.times = []
+        self.outliers = 0
+
+    def record(self, dt: float) -> bool:
+        is_outlier = False
+        if len(self.times) >= 5:
+            mean = sum(self.times) / len(self.times)
+            if dt > self.outlier_factor * mean:
+                self.outliers += 1
+                is_outlier = True
+        self.times.append(dt)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        return is_outlier

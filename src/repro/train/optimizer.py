@@ -1,0 +1,123 @@
+"""AdamW with global-norm clipping, warmup-cosine schedule, and optional
+bf16 gradient compression (grads accumulated/reduced in bf16 against fp32
+master weights — the cross-device all-reduce then moves half the bytes)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def init_opt_state(params: Any) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_state_specs(param_shardings: Any) -> dict:
+    """Optimizer state shards exactly like params (ZeRO-3 style)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    leaves = jax.tree.leaves(param_shardings)
+    step = P()
+    if leaves and isinstance(leaves[0], NamedSharding):
+        step = NamedSharding(leaves[0].mesh, P())
+    return {"mu": param_shardings, "nu": param_shardings, "step": step}
+
+
+def lr_at(step: jnp.ndarray, tc: TrainConfig) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(tc.warmup_steps, 1), 1.0)
+    decay = 0.5 * (1 + jnp.cos(jnp.pi * jnp.minimum(step / max(tc.steps, 1), 1.0)))
+    return tc.learning_rate * warm * (0.1 + 0.9 * decay)
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(
+    params: Any, grads: Any, opt_state: dict, tc: TrainConfig
+) -> Tuple[Any, dict, dict]:
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, tc.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(step, tc)
+    b1, b2 = tc.b1, tc.b2
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mu_hat = mu / (1 - b1 ** step.astype(jnp.float32))
+        nu_hat = nu / (1 - b2 ** step.astype(jnp.float32))
+        p = p - lr * (mu_hat / (jnp.sqrt(nu_hat) + 1e-8) + tc.weight_decay * p)
+        return p, mu, nu
+
+    flat = jax.tree.map(upd, params, grads, opt_state["mu"], opt_state["nu"])
+    new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return (
+        new_params,
+        {"mu": new_mu, "nu": new_nu, "step": step},
+        {"grad_norm": gnorm, "lr": lr},
+    )
+
+
+def make_train_step(loss_fn, tc: TrainConfig):
+    """Build the (micro-batched) train step.
+
+    ``batch`` leaves carry a leading microbatch dim when tc.microbatches > 1;
+    gradients are accumulated in ``tc.grad_dtype`` (bf16 halves all-reduce
+    traffic; fp32 master weights keep the update exact).
+    """
+    gdt = jnp.dtype(tc.grad_dtype)
+    bf16_grads = tc.grad_dtype == "bfloat16"
+
+    def single(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def step_fn(params, opt_state, batch):
+        if bf16_grads:
+            # Differentiate w.r.t. a bf16 copy: gradients (and therefore the
+            # cross-device reduce-scatters XLA inserts) are bf16 — half the
+            # wire traffic; the fp32 master update happens in adamw_update.
+            master = params
+            params = jax.tree.map(
+                lambda p: p.astype(jnp.bfloat16)
+                if p.dtype == jnp.float32 else p, params)
+        if tc.microbatches <= 1:
+            loss, grads = single(params, batch)
+        else:
+            def micro(carry, mb):
+                acc_loss, acc_g = carry
+                loss, g = single(params, mb)
+                g = jax.tree.map(lambda a, b: a + b.astype(gdt), acc_g, g)
+                return (acc_loss + loss, g), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, gdt), params
+            )
+            (loss, grads), _ = jax.lax.scan(
+                micro, (jnp.zeros((), jnp.float32), zero_g), batch
+            )
+            loss = loss / tc.microbatches
+            grads = jax.tree.map(lambda g: g / tc.microbatches, grads)
+        if bf16_grads:
+            params = master
+        params, opt_state, metrics = adamw_update(params, grads, opt_state, tc)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return step_fn

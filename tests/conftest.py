@@ -1,0 +1,9 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see 1 real device;
+only launch/dryrun.py forces the 512-device placeholder topology."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,118 @@
+"""Eq. (1) precision model: Table I reproduction + Monte Carlo agreement."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import precision_model as pm
+
+
+class TestTableI:
+    """Paper Table I (1000-trial MC): our closed form must match to ~1e-2."""
+
+    # (N, c, K) -> paper value
+    PAPER = {
+        (10**6, 16, 50): 0.998, (10**6, 16, 75): 0.983, (10**6, 16, 100): 0.942,
+        (10**6, 28, 100): 0.996, (10**6, 32, 100): 0.997,
+        (10**7, 16, 100): 0.947, (10**7, 28, 100): 0.995,
+        (10**7, 32, 100): 0.998,
+    }
+
+    @pytest.mark.parametrize("key", sorted(PAPER))
+    def test_matches_paper(self, key):
+        n, c, big_k = key
+        ours = pm.expected_precision(n, c, 8, big_k)
+        assert ours == pytest.approx(self.PAPER[key], abs=0.01)
+
+    def test_small_k_exact(self):
+        # K <= k: every partition can hold all of them -> precision 1
+        for big_k in (1, 4, 8):
+            assert pm.expected_precision(10**6, 16, 8, big_k) == 1.0
+
+
+class TestMonteCarloAgreement:
+    @pytest.mark.parametrize("c,big_k", [(16, 100), (32, 100), (16, 50)])
+    def test_mc_vs_closed_form(self, c, big_k):
+        exact = pm.expected_precision(10**6, c, 8, big_k)
+        mc = pm.monte_carlo_precision(10**6, c, 8, big_k, trials=4000, seed=1)
+        assert mc == pytest.approx(exact, abs=0.01)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    c=st.sampled_from([4, 8, 16, 32, 64]),
+    k=st.sampled_from([4, 8, 16]),
+    big_k=st.sampled_from([8, 25, 50, 100]),
+)
+def test_property_monotone_in_partitions(c, k, big_k):
+    """More partitions -> precision never decreases (paper: 'as c increases,
+    so does the approximation accuracy')."""
+    n = 10**6
+    p1 = pm.expected_precision(n, c, k, big_k)
+    p2 = pm.expected_precision(n, 2 * c, k, big_k)
+    assert p2 >= p1 - 1e-12
+    assert 0.0 <= p1 <= 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.sampled_from([2, 4, 8]), big_k=st.sampled_from([16, 64, 100]))
+def test_property_monotone_in_k(k, big_k):
+    n, c = 10**6, 16
+    assert (pm.expected_precision(n, c, 2 * k, big_k)
+            >= pm.expected_precision(n, c, k, big_k) - 1e-12)
+
+
+def test_min_partitions_search():
+    c = pm.min_partitions_for_precision(10**6, 8, 100, target=0.99)
+    assert pm.expected_precision(10**6, c, 8, 100) >= 0.99
+    assert c <= 64  # paper: 'at least 16 partitions' suffices at 0.94+
+
+
+def test_empirical_precision_matches_model():
+    """End-to-end: measured precision of the real approximate pipeline sits
+    near the Eq. (1) expectation (it is exact for rank-uniform partitions)."""
+    import jax.numpy as jnp
+
+    import repro.core as core
+
+    n, c, k, big_k = 3000, 8, 4, 32
+    precs = []
+    for seed in range(8):
+        csr = core.synthetic_embedding_csr(n, 64, 8, "uniform", seed)
+        x = np.random.default_rng(seed).standard_normal(64).astype(np.float32)
+        idx = core.build_index(csr, core.TopKSpMVConfig(
+            big_k=big_k, k=k, num_partitions=c, block_size=32))
+        av, ar = core.topk_spmv(idx, jnp.asarray(x), use_kernel=False)
+        ev, er = core.topk_spmv_exact(csr, x, big_k)
+        precs.append(len(set(np.asarray(ar).tolist()) & set(er.tolist())) / big_k)
+    model = pm.expected_precision(n, c, k, big_k)
+    assert np.mean(precs) == pytest.approx(model, abs=0.06)
+
+
+class TestAdaptivePlanning:
+    """Paper §VI future work: precision/performance-target reconfiguration."""
+
+    def test_cheapest_format_meeting_target(self):
+        from repro.core.adaptive import plan_for_target
+
+        vp = {"Q7": 0.94, "BF16": 0.995, "Q15": 0.999, "F32": 1.0}
+        strict = plan_for_target(10**6, 512, 100, 0.99, value_precisions=vp)
+        loose = plan_for_target(10**6, 512, 100, 0.90, value_precisions=vp)
+        assert loose.bytes_per_nnz <= strict.bytes_per_nnz
+        assert loose.value_format == "Q7"
+        assert strict.predicted_precision >= 0.99
+
+    def test_unreachable_target_raises(self):
+        from repro.core.adaptive import plan_for_target
+
+        vp = {f: 0.5 for f in ("Q7", "BF16", "Q15", "F32")}
+        with pytest.raises(ValueError):
+            plan_for_target(10**6, 512, 100, 0.99, value_precisions=vp)
+
+    def test_calibration_orders_formats(self):
+        import repro.core as core
+        from repro.core.adaptive import calibrate_value_precision
+
+        csr = core.synthetic_embedding_csr(2000, 128, 10, "gamma", 1)
+        vp = calibrate_value_precision(csr, big_k=16, n_queries=3)
+        assert vp["F32"] == 1.0
+        assert vp["Q7"] <= vp["Q15"] + 0.05  # coarser never much better

@@ -1,0 +1,43 @@
+"""Fixed-point quantization properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as q
+
+
+@pytest.mark.parametrize("fmt", ["Q7", "Q15"])
+def test_roundtrip_error_bound(fmt):
+    rng = np.random.default_rng(0)
+    v = rng.uniform(-0.99, 0.99, 1000).astype(np.float32)
+    f = q.FORMATS[fmt]
+    back = np.asarray(q.dequantize(q.quantize(v, f), f))
+    assert np.abs(back - v).max() <= q.quantization_error_bound(f) + 1e-7
+
+
+def test_saturation():
+    f = q.FORMATS["Q7"]
+    out = q.quantize(np.array([10.0, -10.0], np.float32), f)
+    assert out[0] == 127 and out[1] == -128
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=st.sampled_from([20, 25, 32]), seed=st.integers(0, 100))
+def test_simulated_fixed_point_monotone_in_bits(bits, seed):
+    """More bits -> error never larger (paper Table II ladder)."""
+    rng = np.random.default_rng(seed)
+    v = rng.uniform(-0.9, 0.9, 500)
+    e_lo = np.abs(q.simulate_fixed_point(v, bits) - v).max()
+    e_hi = np.abs(q.simulate_fixed_point(v, bits + 5) - v).max()
+    # the simulated values are returned as float32, whose representation
+    # error (~6e-8 abs for |v|<1) floors the achievable error at >=25 bits
+    f32_floor = 6e-8
+    assert e_hi <= e_lo + f32_floor
+    assert e_lo <= max(2.0 ** -(bits - 1), f32_floor)
+
+
+def test_bytes_per_value():
+    assert q.F32.bytes_per_value == 4
+    assert q.BF16.bytes_per_value == 2
+    assert q.Q15.bytes_per_value == 2
+    assert q.Q7.bytes_per_value == 1

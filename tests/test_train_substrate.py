@@ -1,0 +1,160 @@
+"""Optimizer, data pipeline determinism, checkpointing, fault tolerance."""
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.configs.base import ShapeConfig, TrainConfig
+from repro.train import data as data_lib
+from repro.train import optimizer as opt_lib
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault_tolerance import StepTimer, StepWatchdog
+from repro.train.loop import train
+
+
+class TestOptimizer:
+    def test_adamw_converges_quadratic(self):
+        tc = TrainConfig(learning_rate=0.1, warmup_steps=1, steps=100,
+                         weight_decay=0.0, grad_clip=10.0)
+        params = {"w": jnp.array([5.0, -3.0])}
+        opt = opt_lib.init_opt_state(params)
+        for _ in range(100):
+            g = {"w": 2 * params["w"]}
+            params, opt, _ = opt_lib.adamw_update(params, g, opt, tc)
+        assert float(jnp.abs(params["w"]).max()) < 0.5
+
+    def test_grad_clip(self):
+        tc = TrainConfig(grad_clip=1.0)
+        params = {"w": jnp.zeros(3)}
+        opt = opt_lib.init_opt_state(params)
+        _, _, m = opt_lib.adamw_update(params, {"w": jnp.full(3, 100.0)}, opt, tc)
+        assert float(m["grad_norm"]) > 1.0  # reported pre-clip
+
+    def test_microbatch_equivalence(self):
+        """K microbatches of B/K == one batch of B (fp32 accumulation)."""
+        cfg = smoke_config("smollm_360m")
+        from repro.models.model_zoo import get_model
+
+        api = get_model(cfg)
+        params = api.init_params(jax.random.key(0), 16)
+        shape = ShapeConfig("t", "train", 16, 4)
+        batch = data_lib.batch_for_step(0, cfg, shape, seed=0)
+        tc1 = TrainConfig(microbatches=1)
+        tc2 = TrainConfig(microbatches=2)
+        opt = opt_lib.init_opt_state(params)
+        s1 = opt_lib.make_train_step(api.loss_fn, tc1)
+        s2 = opt_lib.make_train_step(api.loss_fn, tc2)
+        p1, _, m1 = s1(params, opt, batch)
+        mb = jax.tree.map(lambda t: t.reshape(2, 2, *t.shape[1:]), batch)
+        p2, _, m2 = s2(params, opt, mb)
+        assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-5)
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)
+
+
+class TestData:
+    def test_deterministic_across_calls(self):
+        cfg = smoke_config("granite_8b")
+        shape = ShapeConfig("t", "train", 16, 4)
+        b1 = data_lib.batch_for_step(7, cfg, shape, seed=3)
+        b2 = data_lib.batch_for_step(7, cfg, shape, seed=3)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+    def test_distinct_steps(self):
+        cfg = smoke_config("granite_8b")
+        shape = ShapeConfig("t", "train", 16, 4)
+        b1 = data_lib.batch_for_step(1, cfg, shape)
+        b2 = data_lib.batch_for_step(2, cfg, shape)
+        assert not np.array_equal(b1["tokens"], b2["tokens"])
+
+    def test_labels_are_shifted_tokens(self):
+        cfg = smoke_config("granite_8b")
+        shape = ShapeConfig("t", "train", 16, 4)
+        b = data_lib.batch_for_step(0, cfg, shape)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+class TestCheckpoint:
+    def test_roundtrip(self):
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, keep=2, async_save=False)
+            state = {"a": jnp.arange(5.0), "b": {"c": jnp.ones((2, 3))}}
+            mgr.save(3, state)
+            step, back = mgr.restore(state)
+            assert step == 3
+            np.testing.assert_array_equal(back["a"], state["a"])
+
+    def test_retention(self):
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, keep=2, async_save=False)
+            for s in (1, 2, 3, 4):
+                mgr.save(s, {"x": jnp.array([s])})
+            assert mgr.all_steps() == [3, 4]
+
+    def test_async_save(self):
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, keep=3, async_save=True)
+            mgr.save(1, {"x": jnp.ones(1000)})
+            mgr.wait()
+            assert mgr.latest_step() == 1
+
+    def test_structure_mismatch_rejected(self):
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, async_save=False)
+            mgr.save(1, {"x": jnp.ones(3)})
+            with pytest.raises(ValueError, match="leaves"):
+                mgr.restore({"x": jnp.ones(3), "y": jnp.ones(2)})
+
+    def test_elastic_reshard_restore(self):
+        """Checkpoint saved unsharded restores onto a different mesh."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, async_save=False)
+            state = {"w": jnp.arange(16.0).reshape(4, 4)}
+            mgr.save(1, state)
+            mesh = jax.make_mesh((1,), ("data",))
+            sh = {"w": NamedSharding(mesh, P("data"))}
+            _, back = mgr.restore(state, shardings=sh)
+            assert back["w"].sharding == sh["w"]
+
+
+class TestFaultTolerance:
+    def test_watchdog_fires(self):
+        wd = StepWatchdog(0.05)
+        with wd:
+            time.sleep(0.15)
+        assert wd.fired
+
+    def test_watchdog_no_false_positive(self):
+        wd = StepWatchdog(5.0)
+        with wd:
+            pass
+        assert not wd.fired
+
+    def test_step_timer_outliers(self):
+        t = StepTimer(outlier_factor=2.0)
+        for _ in range(10):
+            t.record(1.0)
+        assert t.record(5.0) is True
+        assert t.outliers == 1
+
+
+def test_end_to_end_loss_decreases_and_resumes():
+    """The (b) deliverable in miniature: train, crash, resume, keep training."""
+    with tempfile.TemporaryDirectory() as d:
+        shape = ShapeConfig("t", "train", 32, 4)
+        tc = TrainConfig(steps=6, warmup_steps=2, learning_rate=1e-3,
+                         checkpoint_every=3, checkpoint_dir=d)
+        out1 = train(smoke_config("smollm_360m"), shape, tc, log_every=100)
+        assert out1["final_loss"] < out1["history"][0]
+        # "crash" after step 6; resume to step 8
+        tc2 = TrainConfig(steps=8, warmup_steps=2, learning_rate=1e-3,
+                          checkpoint_every=100, checkpoint_dir=d)
+        out2 = train(smoke_config("smollm_360m"), shape, tc2, log_every=100)
+        assert len(out2["history"]) == 2  # only steps 6,7 ran
