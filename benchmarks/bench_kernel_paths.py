@@ -1,0 +1,136 @@
+"""Inner-loop + batching perf trajectory: old-vs-new kernel paths, timed.
+
+Two sweeps at the paper's design point (B = 256, T = 2):
+
+  * legacy (one-hot segmented sum + k-pass argmax) vs linear (cumsum-
+    difference + threshold-filter-then-merge) inner loops, per value format;
+  * single-query vs multi-query batching at Q in {1, 8, 64} — the batched
+    call streams the matrix ONCE for all Q queries, the sequential baseline
+    re-streams it per query.
+
+Numbers are host-side interpret-mode timings (the correctness harness, not
+TPU silicon), but the work ratio between paths is real: the legacy stage 2
+does ~TB^2 MACs per step where linear does ~TB adds.  Results are written to
+``BENCH_topk_spmv.json`` at the repo root so the perf trajectory is tracked
+across PRs.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bscsr
+from repro.kernels import ops
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+BENCH_JSON = REPO_ROOT / "BENCH_topk_spmv.json"
+
+BLOCK = 256          # B — acceptance design point
+T_STEP = 2           # T
+CORES = 8
+K = 8
+BIG_K = 64
+
+
+def _time(fn, repeats: int = 3) -> float:
+    fn()  # compile / warm caches
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats
+
+
+def run(verbose: bool = True, n_rows: int = 8192, n_cols: int = 256,
+        mean_nnz: int = 16, repeats: int = 3):
+    csr = bscsr.synthetic_embedding_csr(n_rows, n_cols, mean_nnz, "gamma", 0)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal(n_cols), jnp.float32)
+    nnz = csr.nnz
+    results = []
+
+    # --- sweep 1: inner loops across value formats (single query) ---
+    for fmt in ("F32", "BF16", "Q15", "Q7"):
+        packed = ops.pack_partitions(csr, CORES, BLOCK, fmt,
+                                     packets_multiple=T_STEP)
+        for loop in ("legacy", "linear"):
+            t = _time(
+                lambda p=packed, l=loop: ops.topk_spmv_blocked(
+                    x, p, BIG_K, k=K, packets_per_step=T_STEP, inner_loop=l,
+                )[0].block_until_ready(),
+                repeats,
+            )
+            results.append({
+                "sweep": "inner_loop", "fmt": fmt, "inner_loop": loop, "q": 1,
+                "us_per_call": t * 1e6, "gnnz_per_s": nnz / t / 1e9,
+            })
+            if verbose:
+                print(f"inner_loop fmt={fmt:5s} {loop:7s} "
+                      f"{t*1e3:8.2f} ms  {nnz/t/1e9:.4f} GNNZ/s")
+
+    # --- sweep 2: single vs batched query (F32) ---
+    packed = ops.pack_partitions(csr, CORES, BLOCK, "F32",
+                                 packets_multiple=T_STEP)
+    t_single = _time(
+        lambda: ops.topk_spmv_blocked(
+            x, packed, BIG_K, k=K, packets_per_step=T_STEP,
+        )[0].block_until_ready(),
+        repeats,
+    )
+    for q in (1, 8, 64):
+        xs = jnp.asarray(rng.standard_normal((q, n_cols)), jnp.float32)
+        t_batch = _time(
+            lambda xs=xs: ops.topk_spmv_batched(
+                xs, packed, BIG_K, k=K, packets_per_step=T_STEP,
+            )[0].block_until_ready(),
+            repeats,
+        )
+        # effective nnz throughput: all Q queries consume the stream once
+        results.append({
+            "sweep": "batching", "fmt": "F32", "inner_loop": "linear", "q": q,
+            "us_per_call": t_batch * 1e6,
+            "gnnz_per_s": nnz * q / t_batch / 1e9,
+            "sequential_us": t_single * q * 1e6,
+            "speedup_vs_sequential": t_single * q / t_batch,
+        })
+        if verbose:
+            print(f"batching   Q={q:3d}  batched {t_batch*1e3:8.2f} ms  "
+                  f"sequential {t_single*q*1e3:8.2f} ms  "
+                  f"speedup {t_single*q/t_batch:5.1f}x  "
+                  f"{nnz*q/t_batch/1e9:.4f} GNNZ/s")
+
+    by = {(r["sweep"], r["fmt"], r["inner_loop"], r["q"]): r for r in results}
+    speedup_inner = (by[("inner_loop", "F32", "legacy", 1)]["us_per_call"]
+                     / by[("inner_loop", "F32", "linear", 1)]["us_per_call"])
+    speedup_batch64 = by[("batching", "F32", "linear", 64)]["speedup_vs_sequential"]
+    payload = {
+        "bench": "bench_kernel_paths",
+        "backend": jax.default_backend(),
+        "interpret": True,
+        "matrix": {"n_rows": n_rows, "n_cols": n_cols, "nnz": nnz,
+                   "distribution": "gamma"},
+        "design_point": {"block_size": BLOCK, "packets_per_step": T_STEP,
+                         "cores": CORES, "k": K, "big_k": BIG_K},
+        "results": results,
+        "speedup_linear_vs_legacy_f32": speedup_inner,
+        "speedup_batched_q64_vs_sequential": speedup_batch64,
+    }
+    BENCH_JSON.write_text(json.dumps(payload, indent=2) + "\n")
+    if verbose:
+        print(f"linear vs legacy (F32): {speedup_inner:.1f}x   "
+              f"batched Q=64 vs sequential: {speedup_batch64:.1f}x")
+        print(f"wrote {BENCH_JSON}")
+    return {
+        "name": "bench_kernel_paths",
+        "us_per_call": by[("inner_loop", "F32", "linear", 1)]["us_per_call"],
+        "derived": (f"linear_vs_legacy={speedup_inner:.1f}x "
+                    f"batchQ64_vs_seq={speedup_batch64:.1f}x"),
+    }
+
+
+if __name__ == "__main__":
+    run()

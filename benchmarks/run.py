@@ -9,6 +9,7 @@ import sys
 
 def main() -> None:
     from benchmarks import (
+        bench_kernel_paths,
         fig5_throughput,
         fig6_roofline,
         fig7_accuracy,
@@ -18,7 +19,7 @@ def main() -> None:
     )
 
     mods = [table1_precision, table2_designs, fig5_throughput, fig6_roofline,
-            fig7_accuracy, kernel_validation]
+            fig7_accuracy, kernel_validation, bench_kernel_paths]
     rows = []
     for mod in mods:
         print(f"\n=== {mod.__name__.split('.')[-1]} ===")

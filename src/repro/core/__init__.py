@@ -21,6 +21,7 @@ from repro.core.topk_spmv import (
     TopKSpMVIndex,
     build_index,
     topk_spmv,
+    topk_spmv_batched,
     topk_spmv_exact,
     distributed_topk_spmv_fn,
 )

@@ -183,6 +183,35 @@ def encode_bscsr(
     )
 
 
+def pad_packets(bs: BSCSRMatrix, num_packets: int) -> BSCSRMatrix:
+    """Extend an encoded stream to ``num_packets`` with empty tail packets.
+
+    Padding continues the sentinel row (zero vals/cols, no row-start flags),
+    so the result is identical to encoding with ``pad_packets_to`` — without
+    re-running the encoder.
+    """
+    pad = num_packets - bs.num_packets
+    if pad < 0:
+        raise ValueError(
+            f"cannot shrink a stream: have {bs.num_packets} packets, "
+            f"asked for {num_packets}"
+        )
+    if pad == 0:
+        return bs
+    return dataclasses.replace(
+        bs,
+        vals=np.concatenate(
+            [bs.vals, np.zeros((pad, bs.block_size), dtype=bs.vals.dtype)]
+        ),
+        cols=np.concatenate(
+            [bs.cols, np.zeros((pad, bs.block_size), dtype=bs.cols.dtype)]
+        ),
+        flags=np.concatenate(
+            [bs.flags, np.zeros((pad, bs.flags.shape[1]), dtype=bs.flags.dtype)]
+        ),
+    )
+
+
 def decode_bscsr(bs: BSCSRMatrix) -> CSRMatrix:
     """Stream -> CSR (host; exercises the row-recovery semantics in tests)."""
     from repro.core.quantization import dequantize  # local to avoid jnp at import

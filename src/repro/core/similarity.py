@@ -67,36 +67,13 @@ class SparseEmbeddingIndex:
         With ``use_kernel`` the multi-query Pallas kernel answers all Q
         queries in ONE pass over the stream (per-query bytes/nnz divided by
         Q — the beyond-paper optimization, EXPERIMENTS.md §Perf C4); the
-        default reference path stays fast under jit on CPU.
+        default reference path (one vmapped oracle call, no Python loop)
+        stays fast under jit on CPU.
         """
-        if use_kernel:
-            from repro.kernels import ops as kernel_ops
-            from repro.kernels.bscsr_topk_spmv import bscsr_topk_spmv_multiquery
-
-            packed = self.index.packed
-            cfg = self.config
-            max_rows = int(max(packed.plan.rows_per_partition))
-            lv, lr = bscsr_topk_spmv_multiquery(
-                jnp.asarray(xs, jnp.float32),
-                jnp.asarray(packed.vals), jnp.asarray(packed.cols),
-                jnp.asarray(packed.flags),
-                k=cfg.k, n_rows=max_rows,
-                packets_per_step=cfg.packets_per_step,
-                fmt_name=packed.value_format.name,
-                interpret=cfg.resolve_interpret(),
-            )
-            outs = [
-                kernel_ops.finalize_candidates(
-                    lv[:, q], lr[:, q],
-                    jnp.asarray(packed.row_starts),
-                    jnp.asarray(packed.rows_per_partition),
-                    cfg.big_k, packed.plan.n_rows)
-                for q in range(xs.shape[0])
-            ]
-            return (np.stack([np.asarray(o[0]) for o in outs]),
-                    np.stack([np.asarray(o[1]) for o in outs]))
-        outs = [self.query(x, use_kernel=False) for x in xs]
-        return np.stack([o[0] for o in outs]), np.stack([o[1] for o in outs])
+        v, r = topk_lib.topk_spmv_batched(
+            self.index, jnp.asarray(xs, jnp.float32), use_kernel=use_kernel
+        )
+        return np.asarray(v), np.asarray(r)
 
     def query_exact(self, x: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         return topk_lib.topk_spmv_exact(self.csr, x, self.config.big_k)

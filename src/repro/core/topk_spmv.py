@@ -22,6 +22,16 @@ from repro.core.precision_model import expected_precision, min_partitions_for_pr
 from repro.kernels import ops as kernel_ops
 from repro.kernels import ref as ref_lib
 
+# shard_map moved to the jax namespace (and check_rep became check_vma) in
+# newer releases; support both so the distributed path runs on either.
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _SHARD_MAP_KW = {"check_vma": False}  # pallas_call outputs carry no vma info
+else:  # pragma: no cover - exercised on older jax only
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _SHARD_MAP_KW = {"check_rep": False}
+
 
 @dataclasses.dataclass(frozen=True)
 class TopKSpMVConfig:
@@ -35,6 +45,7 @@ class TopKSpMVConfig:
     value_format: str = "F32"      # F32 | BF16 | Q15 | Q7
     packets_per_step: int = 2      # T
     gather_mode: str = "take"      # take | onehot
+    inner_loop: str = "linear"     # linear | legacy (+ mixed, for parity tests)
     interpret: Optional[bool] = None  # None -> interpret unless on real TPU
 
     def resolve_partitions(self, n_rows: int) -> int:
@@ -94,9 +105,36 @@ def topk_spmv(
             k=cfg.k,
             packets_per_step=cfg.packets_per_step,
             gather_mode=cfg.gather_mode,
+            inner_loop=cfg.inner_loop,
             interpret=cfg.resolve_interpret(),
         )
     return kernel_ops.topk_spmv_reference(x, index.packed, big_k=cfg.big_k, k=cfg.k)
+
+
+def topk_spmv_batched(
+    index: TopKSpMVIndex, xs: jnp.ndarray, use_kernel: bool = True
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched approximate Top-K: Q queries, one pass over the stream.
+
+    ``xs`` is (Q, M); returns (Q, big_k) values and global row ids.  With
+    ``use_kernel`` the multi-query Pallas kernel amortizes every packet read
+    across all Q queries (per-query bytes/nnz divided by Q — §Perf C);
+    otherwise the vmapped jnp oracle evaluates the same approximation.
+    """
+    cfg = index.config
+    if use_kernel:
+        return kernel_ops.topk_spmv_batched(
+            xs,
+            index.packed,
+            big_k=cfg.big_k,
+            k=cfg.k,
+            packets_per_step=cfg.packets_per_step,
+            inner_loop=cfg.inner_loop,
+            interpret=cfg.resolve_interpret(),
+        )
+    return kernel_ops.topk_spmv_reference_batched(
+        xs, index.packed, big_k=cfg.big_k, k=cfg.k
+    )
 
 
 def topk_spmv_exact(
@@ -114,7 +152,7 @@ def topk_spmv_exact(
 # ---------------------------------------------------------------------------
 
 def distributed_topk_spmv_fn(
-    index: TopKSpMVIndex, mesh: Mesh, shard_axis="data"
+    index: TopKSpMVIndex, mesh: Mesh, shard_axis="data", batched: bool = False
 ):
     """Build a jitted query fn with the index sharded core-wise over ``mesh``.
 
@@ -122,6 +160,10 @@ def distributed_topk_spmv_fn(
     over ``shard_axis`` (one group of cores per device = one FPGA per HBM
     stack, scaled out).  ``fn(x, *device_arrays) -> (topk_vals, topk_rows)``.
     ``shard_axis`` may be a tuple of mesh axes (e.g. ("pod", "data")).
+
+    With ``batched`` the returned fn takes a replicated (Q, M) query batch
+    and answers all Q queries in one multi-query pass per device, returning
+    (Q, big_k) arrays — still only c*k*Q candidate pairs cross ICI.
     """
     cfg = index.config
     packed = index.packed
@@ -148,9 +190,14 @@ def distributed_topk_spmv_fn(
     interpret = cfg.resolve_interpret()
 
     def _local(x, vals, cols, flags):
-        from repro.kernels.bscsr_topk_spmv import bscsr_topk_spmv
+        from repro.kernels.bscsr_topk_spmv import (
+            bscsr_topk_spmv,
+            bscsr_topk_spmv_multiquery,
+        )
 
-        return bscsr_topk_spmv(
+        kernel = bscsr_topk_spmv_multiquery if batched else bscsr_topk_spmv
+        kwargs = {} if batched else {"gather_mode": cfg.gather_mode}
+        return kernel(
             x,
             vals,
             cols,
@@ -159,8 +206,9 @@ def distributed_topk_spmv_fn(
             n_rows=max_rows,
             packets_per_step=cfg.packets_per_step,
             fmt_name=packed.value_format.name,
-            gather_mode=cfg.gather_mode,
+            inner_loop=cfg.inner_loop,
             interpret=interpret,
+            **kwargs,
         )
 
     @partial(
@@ -169,15 +217,20 @@ def distributed_topk_spmv_fn(
         out_shardings=(replicated, replicated),
     )
     def query(x, vals, cols, flags):
-        lv, lr = jax.shard_map(
+        lv, lr = _shard_map(
             _local,
             mesh=mesh,
             in_specs=(P(), P(shard_axis), P(shard_axis), P(shard_axis)),
             out_specs=(P(shard_axis), P(shard_axis)),
-            check_vma=False,  # pallas_call outputs carry no vma info
+            **_SHARD_MAP_KW,
         )(x, vals, cols, flags)
         # c*k candidates: tiny; XLA inserts one small all-gather for the merge.
-        return kernel_ops.finalize_candidates(
+        finalize = (
+            kernel_ops.finalize_candidates_batched
+            if batched
+            else kernel_ops.finalize_candidates
+        )
+        return finalize(
             lv, lr, row_starts, rows_per, cfg.big_k, packed.plan.n_rows
         )
 

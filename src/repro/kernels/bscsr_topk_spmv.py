@@ -6,13 +6,35 @@ TPU analogue of one HBM channel feeding one core in max-length bursts.  All
 per-core state lives in on-chip scratch, exactly mirroring the FPGA design:
 
   stage 1  load packet tile, gather x from VMEM (URAM analogue), multiply
-  stage 2  row-aggregate within the tile (one-hot segment-sum on the MXU —
-           the TPU-idiomatic segmented reduce; the FPGA used an unrolled
-           adder chain over the packet)
+  stage 2  row-aggregate within the tile: O(TB) cumsum-difference reduction —
+           inclusive prefix sum of the products, scattered at the
+           segment-end (row-boundary) positions and first-differenced, so
+           each segment sum is the difference of two prefix values.  The FPGA
+           used an unrolled adder chain over the packet; this is its
+           constant-work-per-element TPU analogue.
   stage 3  cross-packet carry bookkeeping (current row id + partial sum in
            SMEM — the paper's ``new_row`` / ``last_packet_output``)
-  stage 4  top-k scratchpad update (k-pass vectorized max-extract in VMEM —
-           replaces the FPGA argmin RAW chain, which would serialize on TPU)
+  stage 4  top-k scratchpad update via threshold-filter-then-merge (paper
+           §IV-B): candidates are first filtered against the running k-th
+           value ``min(acc_v)`` — the paper's scratchpad admission test —
+           then the <=k survivors from one vectorized ``lax.top_k`` are
+           merged with the scratchpad in a single 2k-wide top-k.  Work per
+           packet is O(TB + k log k), not O(k·TB).
+
+The legacy quadratic inner loops (stage 2 as a (TB, TB+1) one-hot matmul on
+the MXU, stage 4 as k serial argmax-extract sweeps over the whole pool) are
+kept behind ``inner_loop`` for parity testing and as a fallback where the
+Mosaic lowering of scatter/top_k is unavailable:
+
+  inner_loop = "linear"       cumsum-difference + threshold-merge (default)
+               "legacy"       one-hot matmul   + k-pass argmax
+               "linear-seg"   cumsum-difference + k-pass argmax
+               "linear-topk"  one-hot matmul   + threshold-merge
+
+Both tie-break identically (stable ``argmax`` / stable ``top_k``: scratchpad
+entries beat equal-valued candidates, lower row ids beat higher), so
+"linear-topk" is bit-identical to "legacy"; the cumsum-difference reduction
+changes only the float summation order.
 
 The kernel never writes row scores to HBM: per core only k (value, row) pairs
 leave the chip, which is the paper's key bandwidth argument (§III-A).
@@ -33,6 +55,18 @@ from repro.core.quantization import FORMATS, ValueFormat
 NEG_INF = float(np.finfo(np.float32).min)
 FLAG_WORD_BITS = 32
 
+INNER_LOOPS = ("linear", "legacy", "linear-seg", "linear-topk")
+
+
+def _inner_loop_flags(inner_loop: str) -> Tuple[bool, bool]:
+    """-> (linear stage-2 segmented sum?, linear stage-4 scratchpad update?)."""
+    if inner_loop not in INNER_LOOPS:
+        raise ValueError(f"inner_loop must be one of {INNER_LOOPS}, got {inner_loop!r}")
+    return (
+        inner_loop in ("linear", "linear-seg"),
+        inner_loop in ("linear", "linear-topk"),
+    )
+
 
 def _unpack_flags_tile(words: jnp.ndarray, tb: int) -> jnp.ndarray:
     """(T*B/32,) int32 words -> (T*B,) int32 {0,1} row-start bits."""
@@ -40,6 +74,68 @@ def _unpack_flags_tile(words: jnp.ndarray, tb: int) -> jnp.ndarray:
     shifts = jnp.arange(FLAG_WORD_BITS, dtype=jnp.uint32)
     bits = (w[:, None] >> shifts[None, :]) & jnp.uint32(1)
     return bits.reshape(tb).astype(jnp.int32)
+
+
+def _segment_sums_onehot(prods: jnp.ndarray, seg: jnp.ndarray, tb: int) -> jnp.ndarray:
+    """Legacy O(TB^2) segmented sum: (..., TB) @ one-hot(TB, TB+1) on the MXU."""
+    seg_ids = jnp.arange(tb + 1, dtype=jnp.int32)
+    onehot = (seg[:, None] == seg_ids[None, :]).astype(jnp.float32)
+    if prods.ndim == 1:
+        return jnp.dot(prods[None, :], onehot, preferred_element_type=jnp.float32)[0]
+    return jnp.dot(prods, onehot, preferred_element_type=jnp.float32)
+
+
+def _segment_sums_linear(
+    prods: jnp.ndarray, f: jnp.ndarray, seg: jnp.ndarray, tb: int
+) -> jnp.ndarray:
+    """O(TB) segmented sum: prefix-sum of products, differenced at boundaries.
+
+    ``ends[s]`` holds the inclusive prefix sum at the last element of segment
+    ``s`` (each segment has exactly one last element, so the scatter indices
+    are unique; non-last elements are parked in a discarded overflow slot).
+    Segment sums are then first differences of ``ends``.  An empty carry
+    segment 0 (packet starts with a row boundary) correctly stays 0.
+    """
+    is_last = jnp.concatenate([f[1:], jnp.ones((1,), f.dtype)]) == 1
+    slot = jnp.where(is_last, seg, tb + 1)            # overflow slot discarded
+    ps = jnp.cumsum(prods, axis=-1)
+    if prods.ndim == 1:
+        ends = jnp.zeros((tb + 2,), jnp.float32).at[slot].set(ps)[: tb + 1]
+        prev = jnp.concatenate([jnp.zeros((1,), jnp.float32), ends[:-1]])
+    else:
+        q = prods.shape[0]
+        ends = jnp.zeros((q, tb + 2), jnp.float32).at[:, slot].set(ps)[:, : tb + 1]
+        prev = jnp.concatenate([jnp.zeros((q, 1), jnp.float32), ends[:, :-1]], axis=-1)
+    return ends - prev
+
+
+def _scratch_update_kpass(pool_v, pool_r, k: int):
+    """Legacy k-pass masked max-extract over the full (k + TB + 1) pool."""
+    new_v, new_r = [], []
+    for _ in range(k):  # unrolled; k is small (paper uses k = 8)
+        i = jnp.argmax(pool_v)
+        new_v.append(pool_v[i])
+        new_r.append(pool_r[i])
+        pool_v = pool_v.at[i].set(NEG_INF)
+    return jnp.stack(new_v), jnp.stack(new_r)
+
+
+def _scratch_update_threshold(acc_v, acc_r, cand_v, cand_r, k: int):
+    """Threshold-filter + single top-k merge (paper's scratchpad admission).
+
+    Candidates not exceeding the running k-th value cannot enter the
+    scratchpad (on ties the incumbent wins, matching the k-pass argmax
+    tie-break), so they are masked before one stable ``lax.top_k`` picks the
+    <=k survivors; a second 2k-wide top-k merges them with the scratchpad.
+    """
+    thr = jnp.min(acc_v)
+    fv = jnp.where(cand_v > thr, cand_v, NEG_INF)
+    cv, ci = jax.lax.top_k(fv, k)                     # stable: row order on ties
+    cr = jnp.take(cand_r, ci)
+    pool_v = jnp.concatenate([acc_v, cv])
+    pool_r = jnp.concatenate([acc_r, cr.astype(jnp.int32)])
+    mv, mi = jax.lax.top_k(pool_v, k)                 # scratchpad first on ties
+    return mv, jnp.take(pool_r, mi)
 
 
 def _topk_spmv_kernel(
@@ -59,7 +155,9 @@ def _topk_spmv_kernel(
     num_steps: int,
     fmt: ValueFormat,
     gather_mode: str,
+    inner_loop: str,
 ):
+    linear_seg, linear_topk = _inner_loop_flags(inner_loop)
     step = pl.program_id(1)
 
     # -- per-core reset (each grid-dim-0 core owns an independent partition) --
@@ -88,13 +186,15 @@ def _topk_spmv_kernel(
         xv = jnp.take(x, c)
     prods = v * xv
 
-    # ---- stage 2: row-aggregate (segmented sum via one-hot matmul) ----
+    # ---- stage 2: row-aggregate (segmented sum, O(TB) by default) ----
     f = _unpack_flags_tile(flags_ref[...], tb)
     seg = jnp.cumsum(f)                         # (tb,) segment id, 0 = carry row
     s_last = seg[-1]
     seg_ids = jnp.arange(tb + 1, dtype=jnp.int32)
-    onehot = (seg[:, None] == seg_ids[None, :]).astype(jnp.float32)
-    seg_sums = jnp.dot(prods[None, :], onehot, preferred_element_type=jnp.float32)[0]
+    if linear_seg:
+        seg_sums = _segment_sums_linear(prods, f, seg, tb)
+    else:
+        seg_sums = _segment_sums_onehot(prods, seg, tb)
 
     # ---- stage 3: cross-packet carry (paper's new_row / last_packet_output) --
     row0 = carry_row[0]
@@ -106,18 +206,17 @@ def _topk_spmv_kernel(
     carry_row[0] = row0 + s_last
     carry_sum[0] = seg_sums[s_last] + jnp.where(s_last == 0, part, 0.0)
 
-    # ---- stage 4: top-k scratchpad update (k-pass masked max-extract) ----
-    pool_v = jnp.concatenate([acc_v[...], cand_v])
-    pool_r = jnp.concatenate([acc_r[...], cand_r.astype(jnp.int32)])
-    new_v = []
-    new_r = []
-    for _ in range(k):  # unrolled; k is small (paper uses k = 8)
-        i = jnp.argmax(pool_v)
-        new_v.append(pool_v[i])
-        new_r.append(pool_r[i])
-        pool_v = pool_v.at[i].set(NEG_INF)
-    acc_v[...] = jnp.stack(new_v)
-    acc_r[...] = jnp.stack(new_r)
+    # ---- stage 4: top-k scratchpad update ----
+    if linear_topk:
+        mv, mr = _scratch_update_threshold(
+            acc_v[...], acc_r[...], cand_v, cand_r.astype(jnp.int32), k
+        )
+    else:
+        pool_v = jnp.concatenate([acc_v[...], cand_v])
+        pool_r = jnp.concatenate([acc_r[...], cand_r.astype(jnp.int32)])
+        mv, mr = _scratch_update_kpass(pool_v, pool_r, k)
+    acc_v[...] = mv
+    acc_r[...] = mr
 
     # ---- emit the core's k candidates on its final step ----
     @pl.when(step == num_steps - 1)
@@ -129,7 +228,8 @@ def _topk_spmv_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "k", "n_rows", "packets_per_step", "fmt_name", "gather_mode", "interpret",
+        "k", "n_rows", "packets_per_step", "fmt_name", "gather_mode",
+        "inner_loop", "interpret",
     ),
 )
 def bscsr_topk_spmv(
@@ -143,6 +243,7 @@ def bscsr_topk_spmv(
     packets_per_step: int = 2,
     fmt_name: str = "F32",
     gather_mode: str = "take",
+    inner_loop: str = "linear",
     interpret: bool = True,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Run the multi-core kernel; returns per-core (vals, local rows), (C, k)."""
@@ -160,6 +261,7 @@ def bscsr_topk_spmv(
         num_steps=num_steps,
         fmt=fmt,
         gather_mode=gather_mode,
+        inner_loop=inner_loop,
     )
     grid = (n_cores, num_steps)
     return pl.pallas_call(
@@ -196,6 +298,10 @@ def bscsr_topk_spmv(
 # 2 flop / (bytes-per-nnz).  Batching Q queries amortizes every packet read
 # across Q dot products: intensity scales by Q while staying memory-bound up
 # to Q ~ 500 (v5e balance point 240 flop/B over ~4 B/nnz).  §Perf C.
+#
+# The stage-2 boundary bookkeeping (flag unpack, segment ids, scatter slots)
+# is computed ONCE per packet and shared across all Q queries; only the
+# prefix sums, carries, and scratchpad updates are per-query (vectorized).
 # ---------------------------------------------------------------------------
 
 def _topk_spmv_mq_kernel(
@@ -214,7 +320,9 @@ def _topk_spmv_mq_kernel(
     n_rows: int,
     num_steps: int,
     fmt: ValueFormat,
+    inner_loop: str,
 ):
+    linear_seg, linear_topk = _inner_loop_flags(inner_loop)
     step = pl.program_id(1)
     nq = x_ref.shape[0]
 
@@ -239,8 +347,10 @@ def _topk_spmv_mq_kernel(
     seg = jnp.cumsum(f)
     s_last = seg[-1]
     seg_ids = jnp.arange(tb + 1, dtype=jnp.int32)
-    onehot = (seg[:, None] == seg_ids[None, :]).astype(jnp.float32)
-    seg_sums = jnp.dot(prods, onehot, preferred_element_type=jnp.float32)
+    if linear_seg:
+        seg_sums = _segment_sums_linear(prods, f, seg, tb)     # (Q, TB+1)
+    else:
+        seg_sums = _segment_sums_onehot(prods, seg, tb)
 
     row0 = carry_row[0]
     part = carry_sum[...]                                      # (Q,)
@@ -251,20 +361,31 @@ def _topk_spmv_mq_kernel(
     carry_row[0] = row0 + s_last
     carry_sum[...] = seg_sums[:, s_last] + jnp.where(s_last == 0, part, 0.0)
 
-    pool_v = jnp.concatenate([acc_v[...], cand_v], axis=1)     # (Q, k+S)
-    pool_r = jnp.concatenate(
-        [acc_r[...], jnp.broadcast_to(cand_r, (nq, tb + 1)).astype(jnp.int32)],
-        axis=1,
-    )
-    qs = jnp.arange(nq)
-    new_v, new_r = [], []
-    for _ in range(k):
-        i = jnp.argmax(pool_v, axis=1)                         # (Q,)
-        new_v.append(pool_v[qs, i])
-        new_r.append(pool_r[qs, i])
-        pool_v = pool_v.at[qs, i].set(NEG_INF)
-    acc_v[...] = jnp.stack(new_v, axis=1)
-    acc_r[...] = jnp.stack(new_r, axis=1)
+    if linear_topk:
+        thr = jnp.min(acc_v[...], axis=1, keepdims=True)       # (Q, 1)
+        fv = jnp.where(cand_v > thr, cand_v, NEG_INF)
+        cv, ci = jax.lax.top_k(fv, k)                          # (Q, k)
+        cr = jnp.take(cand_r, ci).astype(jnp.int32)
+        pool_v = jnp.concatenate([acc_v[...], cv], axis=1)     # (Q, 2k)
+        pool_r = jnp.concatenate([acc_r[...], cr], axis=1)
+        mv, mi = jax.lax.top_k(pool_v, k)
+        acc_v[...] = mv
+        acc_r[...] = jnp.take_along_axis(pool_r, mi, axis=1)
+    else:
+        pool_v = jnp.concatenate([acc_v[...], cand_v], axis=1)  # (Q, k+S)
+        pool_r = jnp.concatenate(
+            [acc_r[...], jnp.broadcast_to(cand_r, (nq, tb + 1)).astype(jnp.int32)],
+            axis=1,
+        )
+        qs = jnp.arange(nq)
+        new_v, new_r = [], []
+        for _ in range(k):
+            i = jnp.argmax(pool_v, axis=1)                     # (Q,)
+            new_v.append(pool_v[qs, i])
+            new_r.append(pool_r[qs, i])
+            pool_v = pool_v.at[qs, i].set(NEG_INF)
+        acc_v[...] = jnp.stack(new_v, axis=1)
+        acc_r[...] = jnp.stack(new_r, axis=1)
 
     @pl.when(step == num_steps - 1)
     def _emit():
@@ -274,7 +395,9 @@ def _topk_spmv_mq_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "n_rows", "packets_per_step", "fmt_name", "interpret"),
+    static_argnames=(
+        "k", "n_rows", "packets_per_step", "fmt_name", "inner_loop", "interpret",
+    ),
 )
 def bscsr_topk_spmv_multiquery(
     x: jnp.ndarray,        # (Q, M) float32 query batch
@@ -286,6 +409,7 @@ def bscsr_topk_spmv_multiquery(
     n_rows: int,
     packets_per_step: int = 2,
     fmt_name: str = "F32",
+    inner_loop: str = "linear",
     interpret: bool = True,
 ):
     """Multi-query kernel; returns per-core (vals, rows) of shape (C, Q, k)."""
@@ -298,6 +422,7 @@ def bscsr_topk_spmv_multiquery(
     w = block // FLAG_WORD_BITS
     kernel = functools.partial(
         _topk_spmv_mq_kernel, k=k, n_rows=n_rows, num_steps=num_steps, fmt=fmt,
+        inner_loop=inner_loop,
     )
     return pl.pallas_call(
         kernel,

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Tuple
 
 import jax
@@ -12,7 +13,7 @@ from repro.core import bscsr as bscsr_lib
 from repro.core import partition as partition_lib
 from repro.core.quantization import FORMATS, ValueFormat
 from repro.kernels import ref as ref_lib
-from repro.kernels.bscsr_topk_spmv import bscsr_topk_spmv
+from repro.kernels.bscsr_topk_spmv import bscsr_topk_spmv, bscsr_topk_spmv_multiquery
 
 NEG_INF = ref_lib.NEG_INF
 
@@ -65,10 +66,8 @@ def pack_partitions(
     encoded = [bscsr_lib.encode_bscsr(p, block_size, fmt) for p in parts]
     max_p = max(e.num_packets for e in encoded)
     max_p = -(-max_p // packets_multiple) * packets_multiple  # step-align
-    encoded = [
-        bscsr_lib.encode_bscsr(p, block_size, fmt, pad_packets_to=max_p)
-        for p in parts
-    ]
+    # Pad the already-encoded streams in place of a second encode pass.
+    encoded = [bscsr_lib.pad_packets(e, max_p) for e in encoded]
     return PackedPartitions(
         vals=np.stack([e.vals for e in encoded]),
         cols=np.stack([e.cols for e in encoded]),
@@ -97,6 +96,25 @@ def finalize_candidates(
     return partition_lib.merge_topk(vals, rows, big_k, n_rows)
 
 
+def finalize_candidates_batched(
+    local_vals: jnp.ndarray,   # (C, Q, k)
+    local_rows: jnp.ndarray,   # (C, Q, k)
+    row_starts: jnp.ndarray,
+    rows_per_part: jnp.ndarray,
+    big_k: int,
+    n_rows: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-query finalize over the multi-query kernel's (C, Q, k) candidates."""
+    fin = functools.partial(
+        finalize_candidates,
+        row_starts=row_starts,
+        rows_per_part=rows_per_part,
+        big_k=big_k,
+        n_rows=n_rows,
+    )
+    return jax.vmap(fin, in_axes=(1, 1))(local_vals, local_rows)  # (Q, big_k)
+
+
 def topk_spmv_blocked(
     x: jnp.ndarray,
     packed: PackedPartitions,
@@ -104,6 +122,7 @@ def topk_spmv_blocked(
     k: int = 8,
     packets_per_step: int = 2,
     gather_mode: str = "take",
+    inner_loop: str = "linear",
     interpret: bool = True,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Single-device multi-core approximate Top-K SpMV via the Pallas kernel."""
@@ -118,9 +137,49 @@ def topk_spmv_blocked(
         packets_per_step=packets_per_step,
         fmt_name=packed.value_format.name,
         gather_mode=gather_mode,
+        inner_loop=inner_loop,
         interpret=interpret,
     )
     return finalize_candidates(
+        lv,
+        lr,
+        jnp.asarray(packed.row_starts),
+        jnp.asarray(packed.rows_per_partition),
+        big_k,
+        packed.plan.n_rows,
+    )
+
+
+def topk_spmv_batched(
+    xs: jnp.ndarray,           # (Q, M) query batch
+    packed: PackedPartitions,
+    big_k: int,
+    k: int = 8,
+    packets_per_step: int = 2,
+    inner_loop: str = "linear",
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Q queries in ONE pass over the stream via the multi-query kernel.
+
+    Returns (Q, big_k) values and global row ids — the batched analogue of
+    ``topk_spmv_blocked``; per-query HBM traffic is divided by Q.
+    """
+    if xs.ndim != 2 or xs.shape[0] == 0:
+        raise ValueError(f"xs must be a non-empty (Q, M) batch, got {xs.shape}")
+    max_rows = int(max(packed.plan.rows_per_partition))
+    lv, lr = bscsr_topk_spmv_multiquery(
+        jnp.asarray(xs, jnp.float32),
+        jnp.asarray(packed.vals),
+        jnp.asarray(packed.cols),
+        jnp.asarray(packed.flags),
+        k=k,
+        n_rows=max_rows,
+        packets_per_step=packets_per_step,
+        fmt_name=packed.value_format.name,
+        inner_loop=inner_loop,
+        interpret=interpret,
+    )
+    return finalize_candidates_batched(
         lv,
         lr,
         jnp.asarray(packed.row_starts),
@@ -137,25 +196,47 @@ def topk_spmv_reference(
     k: int = 8,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Same partitioned approximation, evaluated with the pure-jnp oracle."""
-    lv, lr = [], []
-    for c in range(packed.num_cores):
-        rows_c = int(packed.rows_per_partition[c])
-        v, r = ref_lib.bscsr_topk_ref(
-            jnp.asarray(packed.vals[c]),
-            jnp.asarray(packed.cols[c]),
-            jnp.asarray(packed.flags[c]),
-            jnp.asarray(x, jnp.float32),
-            rows_c,
-            k,
-            packed.value_format,
-        )
-        lv.append(v)
-        lr.append(r)
+    max_rows = int(max(packed.plan.rows_per_partition))
+    lv, lr = ref_lib.bscsr_topk_ref_stacked(
+        jnp.asarray(packed.vals),
+        jnp.asarray(packed.cols),
+        jnp.asarray(packed.flags),
+        jnp.asarray(x, jnp.float32),
+        jnp.asarray(packed.rows_per_partition),
+        max_rows,
+        k,
+        packed.value_format,
+    )
     return finalize_candidates(
-        jnp.stack(lv),
-        jnp.stack(lr),
+        lv,
+        lr,
         jnp.asarray(packed.row_starts),
         jnp.asarray(packed.rows_per_partition),
         big_k,
         packed.plan.n_rows,
     )
+
+
+def topk_spmv_reference_batched(
+    xs: jnp.ndarray,           # (Q, M)
+    packed: PackedPartitions,
+    big_k: int,
+    k: int = 8,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched oracle: vmap of the vectorized reference over the query batch."""
+    max_rows = int(max(packed.plan.rows_per_partition))
+    vals = jnp.asarray(packed.vals)
+    cols = jnp.asarray(packed.cols)
+    flags = jnp.asarray(packed.flags)
+    rows_per = jnp.asarray(packed.rows_per_partition)
+    row_starts = jnp.asarray(packed.row_starts)
+
+    def one_query(x):
+        lv, lr = ref_lib.bscsr_topk_ref_stacked(
+            vals, cols, flags, x, rows_per, max_rows, k, packed.value_format
+        )
+        return finalize_candidates(
+            lv, lr, row_starts, rows_per, big_k, packed.plan.n_rows
+        )
+
+    return jax.vmap(one_query)(jnp.asarray(xs, jnp.float32))

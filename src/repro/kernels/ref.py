@@ -76,6 +76,33 @@ def bscsr_topk_ref(
     return topk_sorted(scores, k)
 
 
+def bscsr_topk_ref_stacked(
+    vals: jnp.ndarray,        # (C, P, B) storage dtype
+    cols: jnp.ndarray,        # (C, P, B)
+    flags: jnp.ndarray,       # (C, P, B//32)
+    x: jnp.ndarray,           # (M,) f32
+    rows_per_core: jnp.ndarray,  # (C,) real rows of each partition
+    max_rows: int,
+    k: int,
+    fmt: ValueFormat | str = "F32",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """All cores' local top-k in one vmap over the stacked partition arrays.
+
+    Scores are computed over a uniform ``max_rows`` segment budget; rows
+    beyond a core's real count (sentinel/padding, which sum to 0, not
+    NEG_INF) are masked before the local top-k so they can never displace
+    real candidates.  Returns (C, k) values and partition-local row ids.
+    """
+    fmt = FORMATS[fmt] if isinstance(fmt, str) else fmt
+
+    def one_core(v, c, fl, rows_c):
+        scores = bscsr_row_scores(v, c, fl, x, max_rows, fmt)
+        scores = jnp.where(jnp.arange(max_rows) < rows_c, scores, NEG_INF)
+        return topk_sorted(scores, k)
+
+    return jax.vmap(one_core)(vals, cols, flags, rows_per_core)
+
+
 def csr_topk_numpy(indptr, indices, data, x, big_k: int):
     """Numpy CSR Top-K — the host-side 'sparse_dot_topn' style baseline."""
     prods = data * x[indices]

@@ -80,11 +80,15 @@ class ServingEngine:
         return self._decode_hidden(self.params, cache, tokens, pos)
 
     def sample_approx(self, hidden: np.ndarray) -> np.ndarray:
-        """Greedy sample via the approximate head. hidden: (B, D)."""
+        """Greedy sample via the approximate head. hidden: (B, D).
+
+        All B rows are answered by ONE multi-query kernel pass over the
+        sparsified-embedding stream (not a per-row loop), so the stream read
+        is amortized across the whole decode batch.
+        """
         assert self.head is not None
-        return np.asarray(
-            [int(self.head.topk_logits(h)[1][0]) for h in np.asarray(hidden)]
-        )
+        _, rows = self.head.topk_logits_batch(np.asarray(hidden))
+        return rows[:, 0].astype(np.int64)
 
     def generate(
         self, prompt: np.ndarray, num_steps: int, greedy: bool = True

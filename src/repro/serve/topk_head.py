@@ -23,6 +23,7 @@ from repro.core import bscsr as bscsr_lib
 from repro.core.precision_model import expected_precision
 from repro.core.topk_spmv import TopKSpMVConfig, build_index
 from repro.core.topk_spmv import topk_spmv as run_topk_spmv
+from repro.core.topk_spmv import topk_spmv_batched as run_topk_spmv_batched
 
 
 @dataclasses.dataclass
@@ -70,6 +71,20 @@ class ApproxTopKHead:
         """Approximate top-K (logits, token ids) for one hidden state (D,)."""
         v, r = run_topk_spmv(
             self.index, jnp.asarray(hidden, jnp.float32), use_kernel=use_kernel
+        )
+        return np.asarray(v), np.asarray(r)
+
+    def topk_logits_batch(
+        self, hiddens: np.ndarray, use_kernel: bool = True
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Approximate top-K (logits, token ids) for a batch of hidden states.
+
+        ``hiddens`` is (B, D); all B queries share one multi-query kernel
+        pass over the sparsified-embedding stream (one pallas_call, no
+        per-row Python loop), returning (B, big_k) arrays.
+        """
+        v, r = run_topk_spmv_batched(
+            self.index, jnp.asarray(hiddens, jnp.float32), use_kernel=use_kernel
         )
         return np.asarray(v), np.asarray(r)
 

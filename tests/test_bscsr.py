@@ -1,6 +1,8 @@
 """BS-CSR format: roundtrip, capacity model, and property tests."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import bscsr

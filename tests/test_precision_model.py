@@ -1,6 +1,8 @@
 """Eq. (1) precision model: Table I reproduction + Monte Carlo agreement."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import precision_model as pm

@@ -1,6 +1,8 @@
 """Fixed-point quantization properties."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import quantization as q

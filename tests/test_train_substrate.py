@@ -8,6 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytest.importorskip("zstandard")  # repro.train.checkpoint hard-requires it
+
 from repro.configs import smoke_config
 from repro.configs.base import ShapeConfig, TrainConfig
 from repro.train import data as data_lib
