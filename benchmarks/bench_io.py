@@ -1,0 +1,39 @@
+"""Shared benchmark plumbing: wall-clock timing + BENCH_topk_spmv.json I/O."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+BENCH_JSON = REPO_ROOT / "BENCH_topk_spmv.json"
+
+
+def time_call(fn, repeats: int = 3) -> float:
+    """Mean seconds per call after one warm-up (compile/caches)."""
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats
+
+
+def merge_into_bench_json(payload: dict, section: str | None = None) -> Path:
+    """Merge-write ``BENCH_topk_spmv.json`` so benches own disjoint keys.
+
+    With ``section`` the payload lands under that top-level key; without it
+    the payload's own keys merge at top level (legacy bench_kernel_paths
+    layout).  Unrelated keys written by other benches are preserved.
+    """
+    data = {}
+    if BENCH_JSON.exists():
+        try:
+            data = json.loads(BENCH_JSON.read_text())
+        except json.JSONDecodeError:
+            data = {}
+    if section is None:
+        data.update(payload)
+    else:
+        data[section] = payload
+    BENCH_JSON.write_text(json.dumps(data, indent=2) + "\n")
+    return BENCH_JSON

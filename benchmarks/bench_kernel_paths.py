@@ -16,33 +16,22 @@ across PRs.
 """
 from __future__ import annotations
 
-import json
-import time
-from pathlib import Path
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+try:
+    from benchmarks.bench_io import BENCH_JSON, merge_into_bench_json, time_call as _time
+except ImportError:  # direct script run: benchmarks/ itself is sys.path[0]
+    from bench_io import BENCH_JSON, merge_into_bench_json, time_call as _time
 from repro.core import bscsr
 from repro.kernels import ops
-
-REPO_ROOT = Path(__file__).resolve().parent.parent
-BENCH_JSON = REPO_ROOT / "BENCH_topk_spmv.json"
 
 BLOCK = 256          # B — acceptance design point
 T_STEP = 2           # T
 CORES = 8
 K = 8
 BIG_K = 64
-
-
-def _time(fn, repeats: int = 3) -> float:
-    fn()  # compile / warm caches
-    t0 = time.perf_counter()
-    for _ in range(repeats):
-        fn()
-    return (time.perf_counter() - t0) / repeats
 
 
 def run(verbose: bool = True, n_rows: int = 8192, n_cols: int = 256,
@@ -119,7 +108,8 @@ def run(verbose: bool = True, n_rows: int = 8192, n_cols: int = 256,
         "speedup_linear_vs_legacy_f32": speedup_inner,
         "speedup_batched_q64_vs_sequential": speedup_batch64,
     }
-    BENCH_JSON.write_text(json.dumps(payload, indent=2) + "\n")
+    # Merge-write: other benches (e.g. streaming_updates) own sibling keys.
+    merge_into_bench_json(payload)
     if verbose:
         print(f"linear vs legacy (F32): {speedup_inner:.1f}x   "
               f"batched Q=64 vs sequential: {speedup_batch64:.1f}x")

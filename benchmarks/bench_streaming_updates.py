@@ -1,0 +1,114 @@
+"""Serve-while-ingest perf: query throughput vs delta fraction + compaction.
+
+The mutable index appends replaced/added rows as delta tile-packets, so the
+served stream grows with churn: live nnz migrates into step-padded delta
+segments and tombstoned slots keep streaming until compaction.  This bench
+replaces batches of rows to sweep the delta fraction, timing the batched
+kernel query at each point, then times ``compact()`` and verifies it restores
+base-only bytes/nnz.  Results merge into ``BENCH_topk_spmv.json`` under
+``streaming_updates`` so the degradation curve is tracked across PRs.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+import repro.core as core
+
+try:
+    from benchmarks.bench_io import BENCH_JSON, merge_into_bench_json, time_call as _time
+except ImportError:  # direct script run: benchmarks/ itself is sys.path[0]
+    from bench_io import BENCH_JSON, merge_into_bench_json, time_call as _time
+
+BLOCK = 256
+T_STEP = 2
+CORES = 8
+K = 8
+BIG_K = 64
+Q = 16
+
+
+def run(verbose: bool = True, n_rows: int = 4096, n_cols: int = 256,
+        mean_nnz: int = 16, repeats: int = 3):
+    csr = core.synthetic_embedding_csr(n_rows, n_cols, mean_nnz, "gamma", 0)
+    cfg = core.TopKSpMVConfig(big_k=BIG_K, k=K, num_partitions=CORES,
+                              block_size=BLOCK, packets_per_step=T_STEP)
+    index = core.SparseEmbeddingIndex(csr, cfg, nnz_per_row=mean_nnz)
+    rng = np.random.default_rng(1)
+    xs = rng.standard_normal((Q, n_cols)).astype(np.float32)
+    base_bytes_per_nnz = index.index.packed.bytes_per_nnz
+
+    def query():
+        index.query_batch(xs, use_kernel=True)
+
+    results = []
+    replaced = 0
+    for target in (0.0, 0.1, 0.25, 0.5):
+        # Replace rows in-place until ~target of live nnz sits in deltas.
+        want = int(target * n_rows)
+        if want > replaced:
+            ids = np.arange(replaced, want)
+            index.upsert(
+                rng.standard_normal((len(ids), n_cols)).astype(np.float32),
+                ids=ids,
+            )
+            replaced = want
+        st = index.stats()
+        t = _time(query, repeats)
+        nnz = st.nnz
+        results.append({
+            "target_delta_fraction": target,
+            "delta_fraction": st.delta_fraction,
+            "tombstoned_slots": st.tombstone_count,
+            "bytes_per_nnz": st.bytes_per_nnz,
+            "us_per_call": t * 1e6,
+            "gnnz_per_s": nnz * Q / t / 1e9,
+        })
+        if verbose:
+            print(f"delta={st.delta_fraction:5.3f}  "
+                  f"bytes/nnz={st.bytes_per_nnz:5.2f}  "
+                  f"batchedQ{Q} {t*1e3:8.2f} ms  "
+                  f"{nnz*Q/t/1e9:.4f} GNNZ/s")
+
+    t0 = time.perf_counter()
+    index.compact()
+    t_compact = time.perf_counter() - t0
+    post = index.stats()
+    t_post = _time(query, repeats)
+    degradation = results[-1]["us_per_call"] / results[0]["us_per_call"]
+    if verbose:
+        print(f"compact(): {t_compact*1e3:.1f} ms  "
+              f"bytes/nnz {results[-1]['bytes_per_nnz']:.2f} -> "
+              f"{post.bytes_per_nnz:.2f} (base {base_bytes_per_nnz:.2f})  "
+              f"post-compact query {t_post*1e3:.2f} ms")
+
+    payload = {
+        "backend": jax.default_backend(),
+        "interpret": True,
+        "matrix": {"n_rows": n_rows, "n_cols": n_cols, "nnz": csr.nnz,
+                   "distribution": "gamma"},
+        "design_point": {"block_size": BLOCK, "packets_per_step": T_STEP,
+                         "cores": CORES, "k": K, "big_k": BIG_K, "q": Q},
+        "results": results,
+        "compact_ms": t_compact * 1e3,
+        "post_compact_us_per_call": t_post * 1e6,
+        "post_compact_bytes_per_nnz": post.bytes_per_nnz,
+        "base_bytes_per_nnz": base_bytes_per_nnz,
+        "slowdown_delta50_vs_base": degradation,
+    }
+    merge_into_bench_json(payload, section="streaming_updates")
+    if verbose:
+        print(f"delta=0.5 slowdown vs fresh: {degradation:.2f}x")
+        print(f"wrote {BENCH_JSON} [streaming_updates]")
+    return {
+        "name": "bench_streaming_updates",
+        "us_per_call": results[0]["us_per_call"],
+        "derived": (f"delta50_slowdown={degradation:.2f}x "
+                    f"compact_ms={t_compact*1e3:.0f}"),
+    }
+
+
+if __name__ == "__main__":
+    run()

@@ -10,6 +10,7 @@ import sys
 def main() -> None:
     from benchmarks import (
         bench_kernel_paths,
+        bench_streaming_updates,
         fig5_throughput,
         fig6_roofline,
         fig7_accuracy,
@@ -19,7 +20,8 @@ def main() -> None:
     )
 
     mods = [table1_precision, table2_designs, fig5_throughput, fig6_roofline,
-            fig7_accuracy, kernel_validation, bench_kernel_paths]
+            fig7_accuracy, kernel_validation, bench_kernel_paths,
+            bench_streaming_updates]
     rows = []
     for mod in mods:
         print(f"\n=== {mod.__name__.split('.')[-1]} ===")

@@ -1,5 +1,6 @@
-"""The paper's end application as a service: batched queries, multi-query
-kernel (beyond-paper), and the mesh-distributed query path.
+"""The paper's end application as a service: batched queries through the
+multi-query kernel, serve-while-ingest on the mutable index (delta packets +
+tombstones + compaction), and the mesh-distributed query path.
 
     PYTHONPATH=src python examples/similarity_service.py
 """
@@ -10,8 +11,15 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.core as core
-from repro.kernels import ops
-from repro.kernels.bscsr_topk_spmv import bscsr_topk_spmv_multiquery
+from repro.serve import CompactionPolicy, StreamingSimilarityService
+
+
+def precision_at_k(index, queries, results, big_k):
+    hits = []
+    for q in range(queries.shape[0]):
+        ev, er = index.query_exact(queries[q])
+        hits.append(len(set(results[q].tolist()) & set(er.tolist())) / big_k)
+    return float(np.mean(hits))
 
 
 def main():
@@ -19,37 +27,48 @@ def main():
     csr = core.synthetic_embedding_csr(20_000, 256, 16, "gamma", seed=2)
     cfg = core.TopKSpMVConfig(big_k=32, k=8, num_partitions=8, block_size=128,
                               value_format="BF16")
-    index = core.build_index(csr, cfg)
-    packed = index.packed
+    index = core.SparseEmbeddingIndex(csr, cfg, nnz_per_row=16)
     queries = rng.standard_normal((8, 256)).astype(np.float32)
 
-    # --- multi-query kernel: 8 queries, ONE pass over the stream ---
-    max_rows = int(max(packed.plan.rows_per_partition))
+    # --- batched queries: 8 queries, ONE kernel pass over the stream ---
     t0 = time.perf_counter()
-    lv, lr = bscsr_topk_spmv_multiquery(
-        jnp.asarray(queries), jnp.asarray(packed.vals),
-        jnp.asarray(packed.cols), jnp.asarray(packed.flags),
-        k=cfg.k, n_rows=max_rows, fmt_name="BF16",
-    )
-    results = [
-        ops.finalize_candidates(
-            lv[:, q], lr[:, q], jnp.asarray(packed.row_starts),
-            jnp.asarray(packed.rows_per_partition), cfg.big_k, csr.shape[0])
-        for q in range(queries.shape[0])
-    ]
+    vals, rows = index.query_batch(queries, use_kernel=True)
     dt = time.perf_counter() - t0
+    packed = index.index.packed
     print(f"multi-query kernel: 8 queries in {dt:.2f}s (one stream pass; "
           f"effective {packed.bytes_per_nnz / 8:.2f} B/nnz/query vs "
           f"{packed.bytes_per_nnz:.2f} single-query)")
-    for q in (0, 7):
-        ev, er = core.topk_spmv_exact(csr, queries[q], cfg.big_k)
-        ar = np.asarray(results[q][1])
-        print(f"  q{q}: precision@{cfg.big_k} = "
-              f"{len(set(ar.tolist()) & set(er.tolist())) / cfg.big_k:.3f}")
+    print(f"  precision@{cfg.big_k} over the batch = "
+          f"{precision_at_k(index, queries, rows, cfg.big_k):.3f}")
+
+    # --- serve-while-ingest: queries interleave with upserts/deletes ---
+    print("\nserve-while-ingest (delta packets + tombstones + compaction):")
+    svc = StreamingSimilarityService(
+        index, CompactionPolicy(max_delta_fraction=0.04)
+    )
+    for round_i in range(4):
+        fresh = rng.standard_normal((300, 256)).astype(np.float32)
+        new_ids = svc.ingest(fresh)                      # append under new ids
+        svc.delete(new_ids[:50])                         # churn: drop some again
+        svc.ingest(rng.standard_normal((20, 256)).astype(np.float32),
+                   ids=new_ids[50:70])                   # replace in place
+        v, r = svc.search(queries)                       # still answering
+        st = svc.stats()
+        print(f"  round {round_i}: rows={st.n_rows}  "
+              f"delta={st.delta_fraction:.3f}  tombstoned_slots={st.tombstone_count}  "
+              f"bytes/nnz={st.bytes_per_nnz:.2f}  v{st.version}  "
+              f"compactions={svc.compactions}")
+        assert not set(np.asarray(r).ravel().tolist()) & set(
+            new_ids[:50].tolist()
+        ), "deleted rows must never be returned"
+    svc.index.compact()
+    st = svc.stats()
+    print(f"  final compact(): delta={st.delta_fraction:.3f}  "
+          f"bytes/nnz={st.bytes_per_nnz:.2f} (base-only restored)")
 
     # --- mesh-distributed path (1 host device here; 256 chips in dryrun) ---
     mesh = jax.make_mesh((len(jax.devices()),), ("data",))
-    fn, arrays = core.distributed_topk_spmv_fn(index, mesh)
+    fn, arrays = core.distributed_topk_spmv_fn(index.index, mesh)
     v, r = fn(jnp.asarray(queries[0]), *arrays)
     print(f"\ndistributed query on mesh {dict(mesh.shape)}: "
           f"top-3 rows {np.asarray(r[:3])}")

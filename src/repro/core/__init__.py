@@ -15,10 +15,11 @@ from repro.core.precision_model import (
     min_partitions_for_precision,
 )
 from repro.core.quantization import FORMATS, ValueFormat
-from repro.core.similarity import SparseEmbeddingIndex
+from repro.core.similarity import SimilaritySearchStats, SparseEmbeddingIndex
 from repro.core.topk_spmv import (
     TopKSpMVConfig,
     TopKSpMVIndex,
+    MutableTopKSpMVIndex,
     build_index,
     topk_spmv,
     topk_spmv_batched,

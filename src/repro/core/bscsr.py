@@ -24,12 +24,39 @@ time by ``row_id >= n_rows``.
 
 Like the original, the layout is *oblivious to the row-density distribution*:
 throughput depends only on nnz, never on skew.
+
+Base / delta / tombstone layout (mutable indexes)
+-------------------------------------------------
+
+Because global row ids are never stored — the kernel recovers the running
+*slot* id purely by counting row-start flags — a stream can be extended
+without re-encoding anything that was already written:
+
+  base segment     the original ``encode_bscsr`` output for a partition,
+                   slots 0..n-1 plus its trailing sentinel row-start.
+  delta segment    ``encode_delta_rows`` encodes appended/replacement rows as
+                   an ordinary mini BS-CSR stream; ``append_packets``
+                   concatenates its packets after the base segment.  The
+                   delta's first row-start *closes* the base sentinel, which
+                   becomes a dead candidate slot; the appended rows occupy the
+                   slots after it.  The kernel body is untouched — it just
+                   keeps counting flags.
+  tombstones       row deletion and replacement never rewrite the stream:
+                   the owning slot is retired in the host-side slot->row map
+                   (``kernels/ops.py``) and, for deletions, the global row id
+                   is marked in a :class:`TombstoneBitmap`.  Both are masked
+                   in ``finalize_candidates`` before the merge, so a
+                   tombstoned row can never be returned.
+
+Periodic compaction (``MutableTopKSpMVIndex.compact``) re-encodes the live
+rows into a fresh base segment, reclaiming dead slots and delta padding and
+restoring base-only bytes/nnz.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -210,6 +237,114 @@ def pad_packets(bs: BSCSRMatrix, num_packets: int) -> BSCSRMatrix:
             [bs.flags, np.zeros((pad, bs.flags.shape[1]), dtype=bs.flags.dtype)]
         ),
     )
+
+
+INVALID_ROW = np.int32(np.iinfo(np.int32).max)
+"""Slot-map entry for a dead candidate slot (sentinel / tombstoned row)."""
+
+
+def encode_delta_rows(
+    rows: Sequence[Tuple[np.ndarray, np.ndarray]],
+    n_cols: int,
+    block_size: int = 256,
+    value_format: ValueFormat | str = "F32",
+) -> BSCSRMatrix:
+    """Encode appended rows as a delta BS-CSR stream.
+
+    ``rows`` is a sequence of ``(indices, data)`` pairs, one per appended row
+    (empty rows are legal and get the placeholder-0 treatment).  The result
+    is an ordinary mini stream — same packet layout, same kernel — meant to
+    be ``append_packets``-ed after a base segment.  The caller owns the
+    mapping from delta-local slot to global row id.
+    """
+    lens = np.array([len(idx) for idx, _ in rows], dtype=np.int64)
+    indptr = np.concatenate([[0], np.cumsum(lens)]).astype(np.int64)
+    if len(rows):
+        indices = np.concatenate([np.asarray(i, np.int32) for i, _ in rows])
+        data = np.concatenate([np.asarray(d, np.float32) for _, d in rows])
+    else:
+        indices = np.zeros(0, np.int32)
+        data = np.zeros(0, np.float32)
+    csr = CSRMatrix(indptr=indptr, indices=indices, data=data,
+                    shape=(len(rows), n_cols))
+    return encode_bscsr(csr, block_size=block_size, value_format=value_format)
+
+
+def append_packets(
+    base: BSCSRMatrix, delta: BSCSRMatrix, pad_packets_to: Optional[int] = None
+) -> BSCSRMatrix:
+    """Concatenate a delta segment's packets after ``base`` — no re-encode.
+
+    Stream semantics of the result: the delta's first row-start closes the
+    base's open sentinel row, so slot ``base.n_rows`` becomes a dead (empty)
+    candidate slot and the delta rows occupy slots ``base.n_rows + 1 ..``.
+    ``n_rows`` of the result counts *slots* (base rows + dead sentinel slot +
+    delta rows); ``decode_bscsr`` accordingly yields the dead slot as an
+    empty row.  ``pad_packets_to`` forwards to :func:`pad_packets`.
+    """
+    if base.block_size != delta.block_size:
+        raise ValueError(
+            f"block size mismatch: base {base.block_size}, delta {delta.block_size}"
+        )
+    if base.value_format != delta.value_format:
+        raise ValueError(
+            f"value format mismatch: base {base.value_format.name}, "
+            f"delta {delta.value_format.name}"
+        )
+    if base.cols.dtype != delta.cols.dtype:
+        raise ValueError("column index dtype mismatch between segments")
+    out = BSCSRMatrix(
+        vals=np.concatenate([base.vals, delta.vals]),
+        cols=np.concatenate([base.cols, delta.cols]),
+        flags=np.concatenate([base.flags, delta.flags]),
+        n_rows=base.n_rows + 1 + delta.n_rows,
+        n_cols=max(base.n_cols, delta.n_cols),
+        nnz=base.nnz + delta.nnz,
+        block_size=base.block_size,
+        value_format=base.value_format,
+    )
+    if pad_packets_to is not None:
+        out = pad_packets(out, pad_packets_to)
+    return out
+
+
+@dataclasses.dataclass
+class TombstoneBitmap:
+    """Deleted global row ids, as a grow-only host-side bitmap.
+
+    Keyed by global row id: ``mark``-ed ids are masked out of every candidate
+    merge (``finalize_candidates``) until the id is resurrected by an upsert.
+    The bitmap survives compaction — a deleted id stays unreturnable even
+    after its stream bytes have been reclaimed.
+    """
+
+    bits: np.ndarray  # (n,) bool
+
+    @classmethod
+    def empty(cls, n_rows: int) -> "TombstoneBitmap":
+        return cls(bits=np.zeros(max(n_rows, 1), dtype=bool))
+
+    def grow(self, n_rows: int) -> None:
+        if n_rows > self.bits.shape[0]:
+            self.bits = np.concatenate(
+                [self.bits, np.zeros(n_rows - self.bits.shape[0], dtype=bool)]
+            )
+
+    def mark(self, row_ids) -> None:
+        self.grow(int(np.max(row_ids)) + 1)
+        self.bits[np.asarray(row_ids, np.int64)] = True
+
+    def clear(self, row_ids) -> None:
+        ids = np.asarray(row_ids, np.int64)
+        ids = ids[ids < self.bits.shape[0]]
+        self.bits[ids] = False
+
+    def __contains__(self, row_id: int) -> bool:
+        return 0 <= row_id < self.bits.shape[0] and bool(self.bits[row_id])
+
+    @property
+    def count(self) -> int:
+        return int(self.bits.sum())
 
 
 def decode_bscsr(bs: BSCSRMatrix) -> CSRMatrix:

@@ -68,10 +68,18 @@ def merge_topk(
     """Merge c*k candidates into the final Top-K (values desc, then row asc).
 
     ``cand_rows`` must already be global row ids.  Sentinel/padding candidates
-    (row id >= n_rows, or NEG_INF values) are masked out.
+    (row id >= n_rows, or NEG_INF values) are masked out.  The output is
+    always ``(big_k,)``: a candidate pool smaller than ``big_k`` is padded
+    with masked sentinels so the query API's shape contract holds even for
+    tiny (e.g. heavily deleted, then compacted) indexes.
     """
     vals = cand_vals.reshape(-1).astype(jnp.float32)
     rows = cand_rows.reshape(-1).astype(jnp.int32)
+    if vals.shape[0] < big_k:
+        pad = big_k - vals.shape[0]
+        sentinel = n_rows if n_rows is not None else np.iinfo(np.int32).max
+        vals = jnp.concatenate([vals, jnp.full((pad,), NEG_INF, jnp.float32)])
+        rows = jnp.concatenate([rows, jnp.full((pad,), sentinel, jnp.int32)])
     if n_rows is not None:
         vals = jnp.where(rows < n_rows, vals, NEG_INF)
     # Tie-break deterministically on the lower row id (matches numpy oracle).

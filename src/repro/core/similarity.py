@@ -3,11 +3,15 @@
 Matches a dense query embedding against a collection of sparse embeddings and
 returns the K most cosine-similar rows.  Wraps index building (sparsify ->
 partition -> BS-CSR encode -> quantize) and batched querying behind one class.
+
+The backing index is a ``MutableTopKSpMVIndex``: rows can be ``upsert``-ed
+and ``delete``-d while serving (delta tile-packets + tombstones, no
+re-encode), and ``compact()`` periodically reclaims the churn.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -22,9 +26,13 @@ class SimilaritySearchStats:
     n_cols: int
     nnz: int
     num_partitions: int
-    bytes_per_nnz: float
+    bytes_per_nnz: float          # effective: stream bytes / live nnz
     stream_bytes: int
     expected_precision: float
+    delta_fraction: float = 0.0   # live nnz held in delta segments / live nnz
+    tombstone_count: int = 0      # retired (tombstoned) candidate slots
+    deleted_rows: int = 0         # globally tombstoned row ids
+    version: int = 0              # snapshot version counter
 
 
 class SparseEmbeddingIndex:
@@ -34,10 +42,12 @@ class SparseEmbeddingIndex:
         self,
         csr: bscsr_lib.CSRMatrix,
         config: Optional[topk_lib.TopKSpMVConfig] = None,
+        nnz_per_row: int = 32,
     ):
-        self.csr = csr
+        self.csr = csr  # the collection the index was built from (base segment)
         self.config = config or topk_lib.TopKSpMVConfig()
-        self.index = topk_lib.build_index(csr, self.config)
+        self.nnz_per_row = nnz_per_row  # sparsification level for dense upserts
+        self.index = topk_lib.MutableTopKSpMVIndex(csr, self.config)
 
     @classmethod
     def from_dense(
@@ -48,7 +58,7 @@ class SparseEmbeddingIndex:
     ) -> "SparseEmbeddingIndex":
         """Sparsify dense embeddings (magnitude top-m) and index them."""
         csr = bscsr_lib.sparsify_topm(embeddings, nnz_per_row)
-        return cls(csr, config)
+        return cls(csr, config, nnz_per_row=nnz_per_row)
 
     def query(
         self, x: np.ndarray, use_kernel: bool = True
@@ -66,9 +76,15 @@ class SparseEmbeddingIndex:
 
         With ``use_kernel`` the multi-query Pallas kernel answers all Q
         queries in ONE pass over the stream (per-query bytes/nnz divided by
-        Q — the beyond-paper optimization, EXPERIMENTS.md §Perf C4); the
-        default reference path (one vmapped oracle call, no Python loop)
-        stays fast under jit on CPU.
+        Q — the beyond-paper optimization, EXPERIMENTS.md §Perf C4).
+
+        The default deliberately differs from ``query(use_kernel=True)``:
+        off-TPU the kernel runs under Pallas ``interpret`` mode, whose
+        per-packet Python dispatch is tolerable for one query but multiplies
+        across a batch, while the vmapped jnp oracle compiles to one XLA
+        program that evaluates the *identical* partitioned approximation.
+        On real TPU silicon pass ``use_kernel=True`` to get the one-pass
+        stream amortization the kernel exists for.
         """
         v, r = topk_lib.topk_spmv_batched(
             self.index, jnp.asarray(xs, jnp.float32), use_kernel=use_kernel
@@ -76,16 +92,66 @@ class SparseEmbeddingIndex:
         return np.asarray(v), np.asarray(r)
 
     def query_exact(self, x: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-        return topk_lib.topk_spmv_exact(self.csr, x, self.config.big_k)
+        """Exact Top-K over the *live* rows — ground truth for accuracy checks.
+
+        Casts the query exactly like ``query`` does, so int/float64 inputs
+        cannot silently change the comparison baseline.
+        """
+        x = np.asarray(jnp.asarray(x, jnp.float32))
+        csr, gids = self.index.live_csr()
+        v, local = topk_lib.topk_spmv_exact(csr, x, self.config.big_k)
+        return v, gids[local].astype(np.int64)
+
+    # -- live updates (serve-while-ingest) ----------------------------------
+
+    def upsert(
+        self,
+        embeddings: np.ndarray,
+        ids: Optional[Sequence[int]] = None,
+        nnz_per_row: Optional[int] = None,
+    ) -> np.ndarray:
+        """Add or replace dense embedding rows; returns their global row ids.
+
+        Rows are magnitude-top-m sparsified like ``from_dense``.  With
+        ``ids=None`` the rows are appended under fresh ids; otherwise each
+        row replaces (or resurrects) the given id.  Updates land as delta
+        tile-packets — no re-encode of the existing stream.
+        """
+        embeddings = np.atleast_2d(np.asarray(embeddings, np.float32))
+        m_keep = min(nnz_per_row or self.nnz_per_row, embeddings.shape[1])
+        sparse = bscsr_lib.sparsify_topm(embeddings, m_keep)
+        rows = [
+            (
+                sparse.indices[sparse.indptr[i] : sparse.indptr[i + 1]],
+                sparse.data[sparse.indptr[i] : sparse.indptr[i + 1]],
+            )
+            for i in range(sparse.shape[0])
+        ]
+        if ids is None:
+            return np.asarray(self.index.add_rows(rows), dtype=np.int64)
+        self.index.replace_rows(list(ids), rows)
+        return np.asarray(list(ids), dtype=np.int64)
+
+    def delete(self, ids: Sequence[int]) -> None:
+        """Tombstone rows: never returned again, reclaimed at ``compact()``."""
+        self.index.delete_rows(list(ids))
+
+    def compact(self) -> None:
+        """Re-encode live rows, restoring base-only bytes/nnz."""
+        self.index.compact()
 
     def stats(self) -> SimilaritySearchStats:
         packed = self.index.packed
         return SimilaritySearchStats(
-            n_rows=self.csr.shape[0],
-            n_cols=self.csr.shape[1],
-            nnz=self.csr.nnz,
+            n_rows=self.index.n_rows,
+            n_cols=packed.n_cols,
+            nnz=packed.nnz,
             num_partitions=packed.num_cores,
             bytes_per_nnz=packed.bytes_per_nnz,
             stream_bytes=packed.stream_bytes,
             expected_precision=self.index.expected_precision,
+            delta_fraction=packed.delta_fraction,
+            tombstone_count=packed.tombstone_count,
+            deleted_rows=self.index.deleted_rows,
+            version=self.index.version,
         )

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +18,9 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import bscsr as bscsr_lib
+from repro.core import partition as partition_lib
 from repro.core.precision_model import expected_precision, min_partitions_for_precision
+from repro.core.quantization import FORMATS
 from repro.kernels import ops as kernel_ops
 from repro.kernels import ref as ref_lib
 
@@ -90,6 +92,295 @@ def build_index(csr: bscsr_lib.CSRMatrix, config: TopKSpMVConfig) -> TopKSpMVInd
         packets_multiple=config.packets_per_step,
     )
     return TopKSpMVIndex(packed=packed, config=config)
+
+
+class MutableTopKSpMVIndex:
+    """A live, serve-while-ingest index: base + per-partition delta segments.
+
+    Rows can be appended (``add_rows``), replaced (``replace_rows`` =
+    tombstone the old copy + append the new one) and deleted
+    (``delete_rows``) without re-encoding the stream: updates are encoded as
+    delta tile-packets (``bscsr.encode_delta_rows``) and concatenated after
+    the owning partition's stream (``bscsr.append_packets``), while retired
+    slots and deleted row ids are masked host-side in
+    ``finalize_candidates``.  The kernel body is untouched.
+
+    Every update batch swaps in a fresh immutable ``PackedPartitions``
+    snapshot under a ``version`` counter — queries holding the previous
+    snapshot (e.g. an in-flight batch, or ``compact()`` re-encoding one
+    partition at a time) keep answering consistently from it.
+
+    Duck-types ``TopKSpMVIndex`` (``.packed`` / ``.config``), so
+    ``topk_spmv`` / ``topk_spmv_batched`` / ``distributed_topk_spmv_fn``
+    work unchanged on the current snapshot.
+
+    Note on precision: tombstoned slots still flow through the kernel's
+    per-core top-k scratchpad until ``compact()`` reclaims them, so heavy
+    churn transiently costs candidate slots (delta fraction and tombstone
+    count are exposed for compaction policies).
+
+    Cost model: mutations never *re-encode* existing packets, but each
+    update batch re-pads and re-stacks the (C, P, B) snapshot arrays — an
+    O(stream bytes) host memcpy.  Batch updates accordingly; incremental
+    (per-partition) snapshot reuse is a ROADMAP follow-up alongside
+    concurrent compaction.
+    """
+
+    def __init__(self, csr: bscsr_lib.CSRMatrix, config: TopKSpMVConfig):
+        self.config = config
+        self._n_cols = csr.shape[1]
+        self._fmt = FORMATS[config.value_format]
+        c = config.resolve_partitions(csr.shape[0])
+        self._plan = partition_lib.PartitionPlan.build(csr.shape[0], c)
+        parts = partition_lib.partition_csr(csr, self._plan)
+        self._streams = [
+            bscsr_lib.encode_bscsr(p, config.block_size, self._fmt) for p in parts
+        ]
+        self._base_packets = max(e.num_packets for e in self._streams)
+        self._slots = [
+            list(range(start, start + size))
+            for start, size in zip(
+                self._plan.row_starts, self._plan.rows_per_partition
+            )
+        ]
+        self._loc = {
+            gid: (ci, si)
+            for ci, slots in enumerate(self._slots)
+            for si, gid in enumerate(slots)
+        }
+        cols_split = np.split(csr.indices, csr.indptr[1:-1])
+        data_split = np.split(csr.data, csr.indptr[1:-1])
+        self._rows = {
+            gid: (cols_split[gid].astype(np.int32), data_split[gid])
+            for gid in range(csr.shape[0])
+        }
+        self._deleted = bscsr_lib.TombstoneBitmap.empty(csr.shape[0])
+        self._next_gid = csr.shape[0]
+        self._live_nnz = csr.nnz
+        self._delta_nnz = 0
+        self._dead_nnz = 0
+        self._tombstone_slots = 0
+        self._version = -1
+        self._packed: Optional[kernel_ops.PackedPartitions] = None
+        self._live_csr_cache = None  # (version, (csr, gids))
+        self._refresh()
+
+    # -- snapshot bookkeeping ------------------------------------------------
+
+    def _refresh(self) -> None:
+        """Swap in a fresh immutable snapshot (bumps the version counter)."""
+        num_slots = np.array([len(s) for s in self._slots], dtype=np.int32)
+        width = max(int(num_slots.max()) if num_slots.size else 0, 1)
+        slot_map = np.full(
+            (len(self._slots), width), bscsr_lib.INVALID_ROW, dtype=np.int32
+        )
+        for ci, slots in enumerate(self._slots):
+            if slots:
+                slot_map[ci, : len(slots)] = np.asarray(slots, dtype=np.int32)
+        self._deleted.grow(self._next_gid)
+        tombs = self._deleted.bits[: max(self._next_gid, 1)].copy()
+        self._packed = kernel_ops.stack_streams(
+            self._streams,
+            self._plan,
+            self._n_cols,
+            self._live_nnz,
+            packets_multiple=self.config.packets_per_step,
+            slot_to_row=slot_map,
+            num_slots=num_slots,
+            n_rows_total=self._next_gid,
+            tombstones=tombs,
+            base_packets=self._base_packets,
+            delta_nnz=self._delta_nnz,
+            dead_nnz=self._dead_nnz,
+            tombstone_count=self._tombstone_slots,
+        )
+        self._version += 1
+
+    @property
+    def packed(self) -> kernel_ops.PackedPartitions:
+        return self._packed
+
+    @property
+    def version(self) -> int:
+        return self._version
+
+    @property
+    def n_rows(self) -> int:
+        """Live (queryable) rows."""
+        return len(self._loc)
+
+    @property
+    def n_rows_total(self) -> int:
+        """Size of the global row-id space (live + deleted ids)."""
+        return self._next_gid
+
+    @property
+    def num_cores(self) -> int:
+        return self._plan.num_partitions
+
+    @property
+    def deleted_rows(self) -> int:
+        return self._deleted.count
+
+    @property
+    def expected_precision(self) -> float:
+        return expected_precision(
+            max(self.n_rows, 1), self.num_cores, self.config.k, self.config.big_k
+        )
+
+    # -- mutation ------------------------------------------------------------
+
+    @staticmethod
+    def _normalize_row(cols, vals) -> Tuple[np.ndarray, np.ndarray]:
+        cols = np.asarray(cols, dtype=np.int32)
+        vals = np.asarray(vals, dtype=np.float32)
+        if cols.shape != vals.shape:
+            raise ValueError(f"row cols/vals mismatch: {cols.shape} vs {vals.shape}")
+        order = np.argsort(cols, kind="stable")
+        return cols[order], vals[order]
+
+    def _append_rows(self, items) -> None:
+        """Append (gid, (cols, vals)) items as delta packets, least-loaded first."""
+        groups: dict = {}
+        sizes = [len(s) for s in self._slots]
+        for gid, row in items:
+            ci = int(np.argmin(sizes))
+            groups.setdefault(ci, []).append((gid, row))
+            sizes[ci] += 1
+        for ci in sorted(groups):
+            rows = [row for _, row in groups[ci]]
+            delta = bscsr_lib.encode_delta_rows(
+                rows, self._n_cols, self.config.block_size, self._fmt
+            )
+            self._streams[ci] = bscsr_lib.append_packets(self._streams[ci], delta)
+            slots = self._slots[ci]
+            # The previously-open sentinel becomes a dead candidate slot.
+            slots.append(int(bscsr_lib.INVALID_ROW))
+            for gid, (cols, vals) in groups[ci]:
+                self._loc[gid] = (ci, len(slots))
+                slots.append(gid)
+                self._rows[gid] = (cols, vals)
+                self._live_nnz += len(cols)
+                self._delta_nnz += len(cols)
+
+    def _tombstone_slot(self, gid: int) -> None:
+        ci, si = self._loc.pop(gid)
+        self._slots[ci][si] = int(bscsr_lib.INVALID_ROW)
+        self._tombstone_slots += 1
+        cols, _ = self._rows.pop(gid)
+        self._live_nnz -= len(cols)
+        if si >= self._plan.rows_per_partition[ci]:  # slot lives in a delta segment
+            self._delta_nnz -= len(cols)
+        self._dead_nnz += len(cols)
+
+    def add_rows(self, rows: Sequence[Tuple[np.ndarray, np.ndarray]]) -> list:
+        """Append new rows; returns their freshly assigned global row ids."""
+        if not rows:
+            return []
+        normalized = [self._normalize_row(c, v) for c, v in rows]
+        gids = list(range(self._next_gid, self._next_gid + len(rows)))
+        self._next_gid += len(rows)
+        self._append_rows(list(zip(gids, normalized)))
+        self._refresh()
+        return gids
+
+    def replace_rows(
+        self, row_ids: Sequence[int], rows: Sequence[Tuple[np.ndarray, np.ndarray]]
+    ) -> None:
+        """Replace rows in place of their ids: tombstone old copy, append new.
+
+        A previously deleted id is resurrected (its tombstone bit clears).
+        """
+        if len(row_ids) != len(rows):
+            raise ValueError("row_ids and rows must be the same length")
+        row_ids = self._validate_ids(row_ids)
+        normalized = [self._normalize_row(c, v) for c, v in rows]
+        for gid in row_ids:
+            if gid in self._loc:
+                self._tombstone_slot(gid)
+        self._deleted.clear(row_ids)
+        self._append_rows(list(zip(row_ids, normalized)))
+        self._refresh()
+
+    def delete_rows(self, row_ids: Sequence[int]) -> None:
+        """Tombstone rows: their slots retire and their ids stay unreturnable."""
+        row_ids = self._validate_ids(row_ids, allow_duplicates=True)
+        for gid in row_ids:
+            if gid in self._loc:
+                self._tombstone_slot(gid)
+            self._deleted.mark([gid])
+        self._refresh()
+
+    def _validate_ids(self, row_ids: Sequence[int], allow_duplicates=False) -> list:
+        out = [int(g) for g in row_ids]
+        for gid in out:
+            if gid < 0 or gid >= self._next_gid:
+                raise KeyError(f"row id {gid} was never assigned")
+        if not allow_duplicates and len(set(out)) != len(out):
+            # a duplicate would append two live slots for one id (ghost copy)
+            raise ValueError("duplicate row ids in one replace batch")
+        return out
+
+    # -- compaction ----------------------------------------------------------
+
+    def live_csr(self) -> Tuple[bscsr_lib.CSRMatrix, np.ndarray]:
+        """Live rows (gid-ascending) as a CSR plus the gid of each CSR row.
+
+        Cached per snapshot version — repeated exact-oracle queries between
+        mutations reuse one materialization instead of re-concatenating
+        every live row.
+        """
+        if self._live_csr_cache is not None and (
+            self._live_csr_cache[0] == self._version
+        ):
+            return self._live_csr_cache[1]
+        gids = np.asarray(sorted(self._loc), dtype=np.int64)
+        lens = np.asarray([len(self._rows[g][0]) for g in gids], dtype=np.int64)
+        indptr = np.concatenate([[0], np.cumsum(lens)]).astype(np.int64)
+        if gids.size:
+            indices = np.concatenate([self._rows[g][0] for g in gids])
+            data = np.concatenate([self._rows[g][1] for g in gids])
+        else:
+            indices = np.zeros(0, np.int32)
+            data = np.zeros(0, np.float32)
+        csr = bscsr_lib.CSRMatrix(
+            indptr=indptr, indices=indices, data=data,
+            shape=(int(gids.size), self._n_cols),
+        )
+        self._live_csr_cache = (self._version, (csr, gids))
+        return csr, gids
+
+    def compact(self) -> None:
+        """Re-encode live rows into a fresh base segment, one partition at a time.
+
+        Reclaims delta packets, dead slots and tombstoned stream bytes,
+        restoring base-only bytes/nnz.  The previous snapshot keeps serving
+        until the final atomic swap; deleted ids stay masked afterwards via
+        the global tombstone bitmap.
+        """
+        csr, gids = self.live_csr()
+        c = max(1, self.config.resolve_partitions(max(csr.shape[0], 1)))
+        plan = partition_lib.PartitionPlan.build(csr.shape[0], c)
+        parts = partition_lib.partition_csr(csr, plan)
+        streams = []
+        for p in parts:  # partition-at-a-time; self._packed still serves meanwhile
+            streams.append(bscsr_lib.encode_bscsr(p, self.config.block_size, self._fmt))
+        self._streams = streams
+        self._base_packets = max(e.num_packets for e in streams)
+        self._plan = plan
+        self._slots = [
+            [int(g) for g in gids[start : start + size]]
+            for start, size in zip(plan.row_starts, plan.rows_per_partition)
+        ]
+        self._loc = {
+            gid: (ci, si)
+            for ci, slots in enumerate(self._slots)
+            for si, gid in enumerate(slots)
+        }
+        self._delta_nnz = 0
+        self._dead_nnz = 0
+        self._tombstone_slots = 0
+        self._refresh()
 
 
 def topk_spmv(
@@ -185,8 +476,14 @@ def distributed_topk_spmv_fn(
         for a in (packed.vals, packed.cols, packed.flags)
     )
     row_starts = jax.device_put(jnp.asarray(packed.row_starts), core_sharded)
-    rows_per = jax.device_put(jnp.asarray(packed.rows_per_partition), core_sharded)
-    max_rows = int(max(packed.plan.rows_per_partition))
+    rows_per = jax.device_put(jnp.asarray(packed.candidate_slots), core_sharded)
+    slot_to_row = None
+    if packed.slot_to_row is not None:
+        slot_to_row = jax.device_put(jnp.asarray(packed.slot_to_row), core_sharded)
+    tombstones = None
+    if packed.tombstones is not None and packed.tombstones.any():
+        tombstones = jax.device_put(jnp.asarray(packed.tombstones), replicated)
+    max_rows = packed.max_slots
     interpret = cfg.resolve_interpret()
 
     def _local(x, vals, cols, flags):
@@ -231,7 +528,8 @@ def distributed_topk_spmv_fn(
             else kernel_ops.finalize_candidates
         )
         return finalize(
-            lv, lr, row_starts, rows_per, cfg.big_k, packed.plan.n_rows
+            lv, lr, row_starts, rows_per, cfg.big_k, packed.n_rows_logical,
+            slot_to_row=slot_to_row, tombstones=tombstones,
         )
 
     return query, device_arrays

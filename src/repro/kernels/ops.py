@@ -1,9 +1,26 @@
-"""Host-side packing + jit'd dispatch around the BS-CSR Top-K SpMV kernel."""
+"""Host-side packing + jit'd dispatch around the BS-CSR Top-K SpMV kernel.
+
+``PackedPartitions`` is a *segmented* container: each core's stream is the
+concatenation of its base segment and any appended delta tile-packets
+(``bscsr.append_packets``).  The kernel is oblivious to segments — it streams
+packets and counts row-start flags into *slot* ids.  Two optional host-side
+arrays translate slots back to the logical index:
+
+  slot_to_row   (C, L) int32 — kernel-local slot -> global row id;
+                ``bscsr.INVALID_ROW`` retires a slot (dead sentinel slot
+                between segments, or a tombstoned/replaced row).
+  tombstones    (n_rows,) bool — deleted global row ids (kept across
+                compaction so a deleted id can never be returned).
+
+Both are applied by ``finalize_candidates`` before the merge; a pure-base
+index (``pack_partitions``) leaves them ``None`` and uses the affine
+``row_starts`` mapping.
+"""
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -16,20 +33,34 @@ from repro.kernels import ref as ref_lib
 from repro.kernels.bscsr_topk_spmv import bscsr_topk_spmv, bscsr_topk_spmv_multiquery
 
 NEG_INF = ref_lib.NEG_INF
+INVALID_ROW = bscsr_lib.INVALID_ROW
 
 
 @dataclasses.dataclass(frozen=True)
 class PackedPartitions:
-    """All core partitions of one matrix, stacked for the (cores, steps) grid."""
+    """All core partitions of one matrix, stacked for the (cores, steps) grid.
 
-    vals: np.ndarray          # (C, P, B)
+    Immutable snapshot: a mutable index swaps in a fresh instance per update
+    batch, so queries holding an older snapshot keep answering consistently.
+    """
+
+    vals: np.ndarray          # (C, P, B) base+delta concatenated streams
     cols: np.ndarray          # (C, P, B)
     flags: np.ndarray         # (C, P, B//32)
     plan: partition_lib.PartitionPlan
     n_cols: int
-    nnz: int
+    nnz: int                  # live nnz (tombstoned stream entries excluded)
     block_size: int
     value_format: ValueFormat
+    # --- segmented-extension fields (None for a pure-base index) ---
+    slot_to_row: Optional[np.ndarray] = None   # (C, L) int32 slot -> global row
+    num_slots: Optional[np.ndarray] = None     # (C,) candidate slots per core
+    n_rows_total: Optional[int] = None         # global row-id space size
+    tombstones: Optional[np.ndarray] = None    # (n_rows_total,) bool, deleted ids
+    base_packets: Optional[int] = None         # packets in the base segment
+    delta_nnz: int = 0                         # live nnz held in delta segments
+    dead_nnz: int = 0                          # stream nnz under retired slots
+    tombstone_count: int = 0                   # retired (tombstoned) slots
 
     @property
     def num_cores(self) -> int:
@@ -44,12 +75,68 @@ class PackedPartitions:
         return np.asarray(self.plan.rows_per_partition, dtype=np.int32)
 
     @property
+    def is_segmented(self) -> bool:
+        return self.slot_to_row is not None
+
+    @property
+    def candidate_slots(self) -> np.ndarray:
+        """(C,) number of kernel-local candidate slots per core."""
+        if self.num_slots is not None:
+            return np.asarray(self.num_slots, dtype=np.int32)
+        return self.rows_per_partition
+
+    @property
+    def max_slots(self) -> int:
+        return max(int(self.candidate_slots.max()), 1)
+
+    @property
+    def n_rows_logical(self) -> int:
+        """Size of the global row-id space (sentinel id for the merge mask)."""
+        return self.n_rows_total if self.n_rows_total is not None else self.plan.n_rows
+
+    @property
+    def delta_fraction(self) -> float:
+        return self.delta_nnz / max(self.nnz, 1)
+
+    @property
     def stream_bytes(self) -> int:
         return self.vals.nbytes + self.cols.nbytes + self.flags.nbytes
 
     @property
     def bytes_per_nnz(self) -> float:
+        """Effective bytes streamed per *live* nnz (grows with delta/dead mass)."""
         return self.stream_bytes / max(self.nnz, 1)
+
+
+def stack_streams(
+    streams: Sequence[bscsr_lib.BSCSRMatrix],
+    plan: partition_lib.PartitionPlan,
+    n_cols: int,
+    nnz: int,
+    packets_multiple: int = 2,
+    **segment_fields,
+) -> PackedPartitions:
+    """Pad per-partition streams to a common step-aligned packet count & stack.
+
+    ``segment_fields`` forwards the segmented-extension fields (slot_to_row,
+    num_slots, n_rows_total, tombstones, ...) straight into the container.
+    """
+    if not streams:
+        raise ValueError("need at least one partition stream")
+    max_p = max(e.num_packets for e in streams)
+    max_p = max(-(-max_p // packets_multiple) * packets_multiple, packets_multiple)
+    padded = [bscsr_lib.pad_packets(e, max_p) for e in streams]
+    return PackedPartitions(
+        vals=np.stack([e.vals for e in padded]),
+        cols=np.stack([e.cols for e in padded]),
+        flags=np.stack([e.flags for e in padded]),
+        plan=plan,
+        n_cols=n_cols,
+        nnz=nnz,
+        block_size=streams[0].block_size,
+        value_format=streams[0].value_format,
+        **segment_fields,
+    )
 
 
 def pack_partitions(
@@ -64,33 +151,40 @@ def pack_partitions(
     plan = partition_lib.PartitionPlan.build(csr.shape[0], num_partitions)
     parts = partition_lib.partition_csr(csr, plan)
     encoded = [bscsr_lib.encode_bscsr(p, block_size, fmt) for p in parts]
-    max_p = max(e.num_packets for e in encoded)
-    max_p = -(-max_p // packets_multiple) * packets_multiple  # step-align
-    # Pad the already-encoded streams in place of a second encode pass.
-    encoded = [bscsr_lib.pad_packets(e, max_p) for e in encoded]
-    return PackedPartitions(
-        vals=np.stack([e.vals for e in encoded]),
-        cols=np.stack([e.cols for e in encoded]),
-        flags=np.stack([e.flags for e in encoded]),
-        plan=plan,
-        n_cols=csr.shape[1],
-        nnz=csr.nnz,
-        block_size=block_size,
-        value_format=fmt,
+    return stack_streams(
+        encoded, plan, csr.shape[1], csr.nnz, packets_multiple=packets_multiple
     )
 
 
 def finalize_candidates(
     local_vals: jnp.ndarray,   # (C, k)
-    local_rows: jnp.ndarray,   # (C, k) partition-local row ids
+    local_rows: jnp.ndarray,   # (C, k) partition-local slot ids
     row_starts: jnp.ndarray,   # (C,)
-    rows_per_part: jnp.ndarray,  # (C,)
+    rows_per_part: jnp.ndarray,  # (C,) candidate slots per core
     big_k: int,
     n_rows: int,
+    slot_to_row: Optional[jnp.ndarray] = None,  # (C, L) slot -> global row id
+    tombstones: Optional[jnp.ndarray] = None,   # (n_rows,) bool deleted ids
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Mask sentinels, globalize row ids, merge c*k candidates into Top-K."""
+    """Mask sentinels/tombstones, globalize slot ids, merge c*k into Top-K.
+
+    Pure-base indexes use the affine mapping ``row_starts + local``;
+    segmented indexes pass ``slot_to_row``, whose ``INVALID_ROW`` entries
+    retire dead slots (inter-segment sentinels, replaced/deleted rows).  The
+    ``tombstones`` bitmap additionally masks deleted global row ids — it is
+    what keeps a deleted id unreturnable after compaction re-encodes the
+    stream.
+    """
     valid = local_rows < rows_per_part[:, None]
-    global_rows = local_rows + row_starts[:, None]
+    if slot_to_row is None:
+        global_rows = local_rows + row_starts[:, None]
+    else:
+        idx = jnp.clip(local_rows, 0, slot_to_row.shape[1] - 1)
+        global_rows = jnp.take_along_axis(slot_to_row, idx, axis=1)
+        valid = valid & (global_rows != INVALID_ROW)
+    if tombstones is not None:
+        safe = jnp.clip(global_rows, 0, tombstones.shape[0] - 1)
+        valid = valid & ~tombstones[safe]
     vals = jnp.where(valid, local_vals, NEG_INF)
     rows = jnp.where(valid, global_rows, n_rows)
     return partition_lib.merge_topk(vals, rows, big_k, n_rows)
@@ -103,6 +197,8 @@ def finalize_candidates_batched(
     rows_per_part: jnp.ndarray,
     big_k: int,
     n_rows: int,
+    slot_to_row: Optional[jnp.ndarray] = None,
+    tombstones: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Per-query finalize over the multi-query kernel's (C, Q, k) candidates."""
     fin = functools.partial(
@@ -111,8 +207,24 @@ def finalize_candidates_batched(
         rows_per_part=rows_per_part,
         big_k=big_k,
         n_rows=n_rows,
+        slot_to_row=slot_to_row,
+        tombstones=tombstones,
     )
     return jax.vmap(fin, in_axes=(1, 1))(local_vals, local_rows)  # (Q, big_k)
+
+
+def _finalize_kwargs(packed: PackedPartitions) -> dict:
+    """Device-array finalize inputs for a packed snapshot (shared by paths)."""
+    kw = dict(
+        row_starts=jnp.asarray(packed.row_starts),
+        rows_per_part=jnp.asarray(packed.candidate_slots),
+        n_rows=packed.n_rows_logical,
+    )
+    if packed.slot_to_row is not None:
+        kw["slot_to_row"] = jnp.asarray(packed.slot_to_row)
+    if packed.tombstones is not None and packed.tombstones.any():
+        kw["tombstones"] = jnp.asarray(packed.tombstones)
+    return kw
 
 
 def topk_spmv_blocked(
@@ -126,28 +238,20 @@ def topk_spmv_blocked(
     interpret: bool = True,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Single-device multi-core approximate Top-K SpMV via the Pallas kernel."""
-    max_rows = int(max(packed.plan.rows_per_partition))
     lv, lr = bscsr_topk_spmv(
         jnp.asarray(x, jnp.float32),
         jnp.asarray(packed.vals),
         jnp.asarray(packed.cols),
         jnp.asarray(packed.flags),
         k=k,
-        n_rows=max_rows,
+        n_rows=packed.max_slots,
         packets_per_step=packets_per_step,
         fmt_name=packed.value_format.name,
         gather_mode=gather_mode,
         inner_loop=inner_loop,
         interpret=interpret,
     )
-    return finalize_candidates(
-        lv,
-        lr,
-        jnp.asarray(packed.row_starts),
-        jnp.asarray(packed.rows_per_partition),
-        big_k,
-        packed.plan.n_rows,
-    )
+    return finalize_candidates(lv, lr, big_k=big_k, **_finalize_kwargs(packed))
 
 
 def topk_spmv_batched(
@@ -166,26 +270,20 @@ def topk_spmv_batched(
     """
     if xs.ndim != 2 or xs.shape[0] == 0:
         raise ValueError(f"xs must be a non-empty (Q, M) batch, got {xs.shape}")
-    max_rows = int(max(packed.plan.rows_per_partition))
     lv, lr = bscsr_topk_spmv_multiquery(
         jnp.asarray(xs, jnp.float32),
         jnp.asarray(packed.vals),
         jnp.asarray(packed.cols),
         jnp.asarray(packed.flags),
         k=k,
-        n_rows=max_rows,
+        n_rows=packed.max_slots,
         packets_per_step=packets_per_step,
         fmt_name=packed.value_format.name,
         inner_loop=inner_loop,
         interpret=interpret,
     )
     return finalize_candidates_batched(
-        lv,
-        lr,
-        jnp.asarray(packed.row_starts),
-        jnp.asarray(packed.rows_per_partition),
-        big_k,
-        packed.plan.n_rows,
+        lv, lr, big_k=big_k, **_finalize_kwargs(packed)
     )
 
 
@@ -196,25 +294,17 @@ def topk_spmv_reference(
     k: int = 8,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Same partitioned approximation, evaluated with the pure-jnp oracle."""
-    max_rows = int(max(packed.plan.rows_per_partition))
     lv, lr = ref_lib.bscsr_topk_ref_stacked(
         jnp.asarray(packed.vals),
         jnp.asarray(packed.cols),
         jnp.asarray(packed.flags),
         jnp.asarray(x, jnp.float32),
-        jnp.asarray(packed.rows_per_partition),
-        max_rows,
+        jnp.asarray(packed.candidate_slots),
+        packed.max_slots,
         k,
         packed.value_format,
     )
-    return finalize_candidates(
-        lv,
-        lr,
-        jnp.asarray(packed.row_starts),
-        jnp.asarray(packed.rows_per_partition),
-        big_k,
-        packed.plan.n_rows,
-    )
+    return finalize_candidates(lv, lr, big_k=big_k, **_finalize_kwargs(packed))
 
 
 def topk_spmv_reference_batched(
@@ -224,19 +314,17 @@ def topk_spmv_reference_batched(
     k: int = 8,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Batched oracle: vmap of the vectorized reference over the query batch."""
-    max_rows = int(max(packed.plan.rows_per_partition))
+    max_slots = packed.max_slots
     vals = jnp.asarray(packed.vals)
     cols = jnp.asarray(packed.cols)
     flags = jnp.asarray(packed.flags)
-    rows_per = jnp.asarray(packed.rows_per_partition)
-    row_starts = jnp.asarray(packed.row_starts)
+    slots_per = jnp.asarray(packed.candidate_slots)
+    fin_kwargs = _finalize_kwargs(packed)
 
     def one_query(x):
         lv, lr = ref_lib.bscsr_topk_ref_stacked(
-            vals, cols, flags, x, rows_per, max_rows, k, packed.value_format
+            vals, cols, flags, x, slots_per, max_slots, k, packed.value_format
         )
-        return finalize_candidates(
-            lv, lr, row_starts, rows_per, big_k, packed.plan.n_rows
-        )
+        return finalize_candidates(lv, lr, big_k=big_k, **fin_kwargs)
 
     return jax.vmap(one_query)(jnp.asarray(xs, jnp.float32))

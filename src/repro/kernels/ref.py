@@ -35,8 +35,22 @@ def unpack_flags(flags: jnp.ndarray, block_size: int) -> jnp.ndarray:
 
 
 def topk_sorted(scores: jnp.ndarray, big_k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Top-K by value desc, ties broken toward the lower row id."""
-    rows = jnp.arange(scores.shape[0], dtype=jnp.int32)
+    """Top-K by value desc, ties broken toward the lower row id.
+
+    Always returns ``(big_k,)`` arrays: when fewer than ``big_k`` scores
+    exist (e.g. a compacted index shrank below k rows per partition), the
+    tail is padded with ``NEG_INF`` / sentinel row id ``len(scores)`` so
+    downstream masking treats it like any other sentinel candidate.
+    """
+    n = scores.shape[0]
+    rows = jnp.arange(n, dtype=jnp.int32)
+    if n < big_k:
+        scores = jnp.concatenate(
+            [scores, jnp.full((big_k - n,), NEG_INF, scores.dtype)]
+        )
+        rows = jnp.concatenate(
+            [rows, jnp.full((big_k - n,), n, jnp.int32)]
+        )
     order = jnp.lexsort((rows, -scores))
     top = order[:big_k]
     return scores[top], rows[top].astype(jnp.int32)

@@ -1,1 +1,3 @@
-"""Serving substrate: batched KV-cache engine + approximate Top-K heads."""
+"""Serving substrate: batched KV-cache engine, approximate Top-K heads, and
+the serve-while-ingest streaming similarity service."""
+from repro.serve.streaming import CompactionPolicy, StreamingSimilarityService

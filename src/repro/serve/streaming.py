@@ -1,0 +1,85 @@
+"""Serve-while-ingest similarity service over a mutable BS-CSR index.
+
+Queries and live updates interleave against the same ``SparseEmbeddingIndex``:
+updates land as delta tile-packets (no re-encode of the served stream), each
+update batch swaps in a fresh immutable snapshot, and a background-style
+compaction policy re-encodes the live rows whenever churn has inflated the
+stream past the configured thresholds.  This is the ROADMAP "streaming index
+updates" item: the paper's static benchmark index, made a living service.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.similarity import SimilaritySearchStats, SparseEmbeddingIndex
+
+
+@dataclasses.dataclass
+class CompactionPolicy:
+    """When to pay a re-encode to reclaim delta packets and tombstones.
+
+    ``max_delta_fraction`` bounds the live nnz served from delta segments
+    (delta packets are step-padded per update batch, so they carry more
+    padding than a fresh base encode); ``max_tombstone_fraction`` bounds
+    retired candidate slots relative to live rows (tombstoned slots still
+    flow through the kernel's per-core top-k scratchpad until compaction).
+    """
+
+    max_delta_fraction: float = 0.25
+    max_tombstone_fraction: float = 0.10
+
+    def should_compact(self, stats: SimilaritySearchStats) -> bool:
+        if stats.delta_fraction > self.max_delta_fraction:
+            return True
+        return stats.tombstone_count > self.max_tombstone_fraction * max(
+            stats.n_rows, 1
+        )
+
+
+class StreamingSimilarityService:
+    """Facade pairing batched queries with live ingest + auto-compaction."""
+
+    def __init__(
+        self,
+        index: SparseEmbeddingIndex,
+        policy: Optional[CompactionPolicy] = None,
+    ):
+        self.index = index
+        self.policy = policy or CompactionPolicy()
+        self.compactions = 0
+        self.queries_served = 0
+        self.rows_ingested = 0
+        self.rows_deleted = 0
+
+    def search(
+        self, xs: np.ndarray, use_kernel: bool = False
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Answer a (Q, M) query batch from the current snapshot."""
+        xs = np.atleast_2d(np.asarray(xs, np.float32))
+        self.queries_served += xs.shape[0]
+        return self.index.query_batch(xs, use_kernel=use_kernel)
+
+    def ingest(
+        self, embeddings: np.ndarray, ids: Optional[Sequence[int]] = None
+    ) -> np.ndarray:
+        """Upsert dense rows (append or replace); may trigger compaction."""
+        out = self.index.upsert(embeddings, ids=ids)
+        self.rows_ingested += len(out)
+        self._maybe_compact()
+        return out
+
+    def delete(self, ids: Sequence[int]) -> None:
+        self.index.delete(ids)
+        self.rows_deleted += len(list(ids))
+        self._maybe_compact()
+
+    def _maybe_compact(self) -> None:
+        if self.policy.should_compact(self.index.stats()):
+            self.index.compact()
+            self.compactions += 1
+
+    def stats(self) -> SimilaritySearchStats:
+        return self.index.stats()

@@ -2,8 +2,18 @@
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:  # property tests only; the plain tests below must run without hypothesis
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    def given(**kwargs):
+        return lambda fn: pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+    def settings(**kwargs):
+        return lambda fn: fn
+
+    class st:  # stand-in: strategies are built at decoration time
+        integers = staticmethod(lambda *a, **k: None)
+        sampled_from = staticmethod(lambda *a, **k: None)
 
 from repro.core import bscsr
 
@@ -98,6 +108,104 @@ class TestCapacityModel:
         # amortized bytes/nnz approaches the model as padding amortizes
         model = bscsr.stream_bytes_per_nnz("BF16", csr.shape[1], 64)
         assert bs.bytes_per_nnz == pytest.approx(model, rel=0.15)
+
+
+class TestRoundtripEdges:
+    """encode -> pad_packets -> decode at the format's corner cases."""
+
+    def test_all_empty_rows(self):
+        csr = bscsr.CSRMatrix(
+            indptr=np.zeros(8, np.int64),
+            indices=np.zeros(0, np.int32),
+            data=np.zeros(0, np.float32),
+            shape=(7, 16),
+        )
+        bs = bscsr.encode_bscsr(csr, block_size=32)
+        bs = bscsr.pad_packets(bs, 3)
+        back = bscsr.decode_bscsr(bs)
+        assert back.shape == (7, 16) and back.nnz == 0
+        np.testing.assert_array_equal(back.indptr, csr.indptr)
+        # every empty row costs exactly one placeholder nnz + one sentinel
+        flags = bscsr.unpack_bits(bs.flags, bs.block_size).reshape(-1)
+        assert flags.sum() == 7 + 1
+
+    def test_single_row_spanning_multiple_packets(self, rng):
+        n = 100  # >3 packets of 32 for one row
+        cols = np.sort(rng.choice(128, size=n, replace=False)).astype(np.int32)
+        data = rng.standard_normal(n).astype(np.float32)
+        data[data == 0.0] = 1.0  # zeros would be dropped as placeholders
+        csr = bscsr.CSRMatrix(
+            indptr=np.array([0, n], np.int64), indices=cols, data=data,
+            shape=(1, 128),
+        )
+        bs = bscsr.encode_bscsr(csr, block_size=32)
+        assert bs.num_packets >= 4
+        bs = bscsr.pad_packets(bs, bs.num_packets + 2)
+        back = bscsr.decode_bscsr(bs)
+        np.testing.assert_array_equal(back.indices, cols)
+        np.testing.assert_allclose(back.data, data, rtol=1e-6)
+
+    @pytest.mark.parametrize("nnz", [31, 32, 33])
+    def test_trailing_sentinel_row_start(self, rng, nnz):
+        """The sentinel that closes the final row may land on the last slot
+        of a packet (nnz=31, block 32), spill into a fresh packet (nnz=32),
+        or sit mid-packet (nnz=33) — all must round-trip."""
+        cols = np.sort(rng.choice(64, size=nnz, replace=False)).astype(np.int32)
+        data = np.abs(rng.standard_normal(nnz)).astype(np.float32) + 0.1
+        csr = bscsr.CSRMatrix(
+            indptr=np.array([0, nnz], np.int64), indices=cols, data=data,
+            shape=(1, 64),
+        )
+        bs = bscsr.encode_bscsr(csr, block_size=32)
+        assert bs.num_packets == (nnz + 1 + 31) // 32
+        flags = bscsr.unpack_bits(bs.flags, bs.block_size).reshape(-1)
+        assert flags.sum() == 2  # row start + trailing sentinel
+        assert flags[nnz]  # sentinel immediately after the last nnz
+        back = bscsr.decode_bscsr(bs)
+        np.testing.assert_array_equal(back.indices, cols)
+        np.testing.assert_allclose(back.data, data, rtol=1e-6)
+
+
+class TestDeltaSegments:
+    def test_append_packets_roundtrip(self, rng):
+        base_csr = random_csr(rng, n_rows=11, allow_empty=False)
+        base = bscsr.encode_bscsr(base_csr, block_size=32)
+        rows = [
+            (np.sort(rng.choice(64, size=5, replace=False)),
+             np.abs(rng.standard_normal(5)) + 0.1)
+            for _ in range(3)
+        ]
+        delta = bscsr.encode_delta_rows(rows, n_cols=64, block_size=32)
+        combined = bscsr.append_packets(base, delta)
+        # slots: 11 base rows, 1 dead sentinel slot, 3 delta rows
+        assert combined.n_rows == 11 + 1 + 3
+        assert combined.nnz == base_csr.nnz + 15
+        back = bscsr.decode_bscsr(combined)
+        np.testing.assert_array_equal(
+            back.to_dense()[:11], base_csr.to_dense()
+        )
+        assert back.indptr[12] == back.indptr[11]  # dead slot decodes empty
+        for j, (cols, vals) in enumerate(rows):
+            got = back.to_dense()[12 + j]
+            want = np.zeros(64, np.float32)
+            want[cols] = vals
+            np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_append_packets_rejects_mismatched_streams(self, rng):
+        base = bscsr.encode_bscsr(random_csr(rng), block_size=32)
+        delta = bscsr.encode_delta_rows(
+            [(np.array([1]), np.array([1.0]))], n_cols=64, block_size=64
+        )
+        with pytest.raises(ValueError):
+            bscsr.append_packets(base, delta)
+
+    def test_tombstone_bitmap(self):
+        tb = bscsr.TombstoneBitmap.empty(4)
+        tb.mark([1, 9])  # auto-grows
+        assert 1 in tb and 9 in tb and 2 not in tb
+        assert tb.count == 2
+        tb.clear([1])
+        assert 1 not in tb and tb.count == 1
 
 
 @settings(max_examples=25, deadline=None)
