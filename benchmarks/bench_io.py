@@ -18,6 +18,27 @@ def time_call(fn, repeats: int = 3) -> float:
     return (time.perf_counter() - t0) / repeats
 
 
+def time_paired(fns: dict, repeats: int = 5) -> dict:
+    """Per-call second samples for several fns, timed in interleaved rounds.
+
+    For A/B comparisons on a shared/noisy host: alternating the candidates
+    inside each round exposes them to the same background load, so ratios
+    of per-key medians stay stable even when absolute times drift between
+    rounds.  All fns are warmed once (compile) before timing; returns
+    ``{key: [seconds, ...]}`` so callers pick their estimator (median for
+    ratios, min for best-case throughput).
+    """
+    for fn in fns.values():
+        fn()
+    out = {k: [] for k in fns}
+    for _ in range(repeats):
+        for key, fn in fns.items():
+            t0 = time.perf_counter()
+            fn()
+            out[key].append(time.perf_counter() - t0)
+    return out
+
+
 def merge_into_bench_json(payload: dict, section: str | None = None) -> Path:
     """Merge-write ``BENCH_topk_spmv.json`` so benches own disjoint keys.
 

@@ -5,8 +5,11 @@ served stream grows with churn: live nnz migrates into step-padded delta
 segments and tombstoned slots keep streaming until compaction.  This bench
 replaces batches of rows to sweep the delta fraction, timing the batched
 kernel query at each point, then times ``compact()`` and verifies it restores
-base-only bytes/nnz.  Results merge into ``BENCH_topk_spmv.json`` under
-``streaming_updates`` so the degradation curve is tracked across PRs.
+base-only bytes/nnz.  It also measures the snapshot-refresh cost per upsert
+batch with incremental padded-stream caching (re-pad only the mutated
+partition) against the legacy full re-pad.  Results merge into
+``BENCH_topk_spmv.json`` under ``streaming_updates`` so the degradation
+curve is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -84,6 +87,36 @@ def run(verbose: bool = True, n_rows: int = 4096, n_cols: int = 256,
               f"{post.bytes_per_nnz:.2f} (base {base_bytes_per_nnz:.2f})  "
               f"post-compact query {t_post*1e3:.2f} ms")
 
+    # --- snapshot-refresh cost: incremental (re-pad mutated partition only)
+    # vs legacy full re-pad, measured as mean single-row-upsert wall-clock
+    # (streaming ingest: one row -> exactly one mutated partition) ---
+    refresh = {}
+    n_upserts = 16
+    for incremental in (True, False):
+        mcfg = core.TopKSpMVConfig(
+            big_k=BIG_K, k=K, num_partitions=CORES, block_size=BLOCK,
+            packets_per_step=T_STEP, incremental_snapshots=incremental,
+        )
+        midx = core.SparseEmbeddingIndex(csr, mcfg, nnz_per_row=mean_nnz)
+        row = rng.standard_normal((1, n_cols)).astype(np.float32)
+        midx.upsert(row)  # warm the padded-stream cache
+        repadded = 0
+        t0 = time.perf_counter()
+        for _ in range(n_upserts):
+            midx.upsert(row)
+            repadded += midx.index.last_refresh_repadded
+        dt = (time.perf_counter() - t0) / n_upserts
+        key = "incremental" if incremental else "full"
+        refresh[f"{key}_upsert_ms"] = dt * 1e3
+        refresh[f"{key}_repadded_partitions"] = repadded / n_upserts
+    refresh["speedup"] = refresh["full_upsert_ms"] / refresh["incremental_upsert_ms"]
+    if verbose:
+        print(f"refresh: incremental {refresh['incremental_upsert_ms']:.2f} ms"
+              f"/upsert (re-pads {refresh['incremental_repadded_partitions']:.1f}"
+              f"/{CORES} partitions)  full {refresh['full_upsert_ms']:.2f} ms"
+              f"/upsert (re-pads {refresh['full_repadded_partitions']:.1f})  "
+              f"-> {refresh['speedup']:.2f}x")
+
     payload = {
         "backend": jax.default_backend(),
         "interpret": True,
@@ -97,6 +130,8 @@ def run(verbose: bool = True, n_rows: int = 4096, n_cols: int = 256,
         "post_compact_bytes_per_nnz": post.bytes_per_nnz,
         "base_bytes_per_nnz": base_bytes_per_nnz,
         "slowdown_delta50_vs_base": degradation,
+        "stream_layout": index.stats().stream_layout,
+        "snapshot_refresh": refresh,
     }
     merge_into_bench_json(payload, section="streaming_updates")
     if verbose:
@@ -106,7 +141,8 @@ def run(verbose: bool = True, n_rows: int = 4096, n_cols: int = 256,
         "name": "bench_streaming_updates",
         "us_per_call": results[0]["us_per_call"],
         "derived": (f"delta50_slowdown={degradation:.2f}x "
-                    f"compact_ms={t_compact*1e3:.0f}"),
+                    f"compact_ms={t_compact*1e3:.0f} "
+                    f"refresh_speedup={refresh['speedup']:.2f}x"),
     }
 
 

@@ -25,6 +25,38 @@ time by ``row_id >= n_rows``.
 Like the original, the layout is *oblivious to the row-density distribution*:
 throughput depends only on nnz, never on skew.
 
+Fused single-stream packet layout
+---------------------------------
+
+The split form above is three separately-pipelined arrays — three strided HBM
+access patterns per grid step where the paper's 512-bit packet is ONE burst.
+``fuse_stream`` packs each tile-packet's ``(flags | cols | vals)`` into a
+single contiguous int32 word row — the TPU analogue of the paper's packet —
+so the kernel pipelines exactly one VMEM block from one contiguous HBM region
+per grid step and recovers the fields with shift/mask bit-ops::
+
+  word index   0 ........ B/32-1 | B/32 ....... B/32+Wc-1 | ............ end
+               +-----------------+------------------------+-----------------+
+  packet row   | flags (B bits,  | cols (B ids at int16/  | vals (B values  |
+  (W int32)    |  1 bit/nnz)     |  int32 width, packed   |  at ValueFormat |
+               |                 |  2-per-word if int16)  |  storage width) |
+               +-----------------+------------------------+-----------------+
+  Wf = B/32 words        Wc = B*col_bytes/4 words   Wv = B*val_bytes/4 words
+
+All sub-fields are little-endian within a word (value ``2i`` in the low half,
+``2i+1`` in the high half; int8 packs 4/word), so host-side fusing is a plain
+``.view(int32)`` + concatenate and the in-kernel decode is shifts and masks.
+Fused and split forms are bit-identical in content and total bytes; the win
+is stream *count* (3 -> 1 contiguous burst per core per step).
+
+Bytes per nnz (B = 256, idx = int16, flag bit amortized):
+
+  format   fused/split stream   plain COO (f32)   note
+  F32      6.125                12.0              4 + 2 + 1/8
+  BF16     4.125                12.0              2 + 2 + 1/8
+  Q15      4.125                12.0              int16 fixed point
+  Q7       3.125                12.0              1 + 2 + 1/8
+
 Base / delta / tombstone layout (mutable indexes)
 -------------------------------------------------
 
@@ -120,6 +152,10 @@ class BSCSRMatrix:
     @property
     def bytes_per_nnz(self) -> float:
         return self.stream_bytes / max(self.nnz, 1)
+
+    def fused_words(self) -> np.ndarray:
+        """This stream's fused single-stream form (see :func:`fuse_stream`)."""
+        return fuse_stream(self)
 
 
 def _pack_bits(bits: np.ndarray) -> np.ndarray:
@@ -237,6 +273,73 @@ def pad_packets(bs: BSCSRMatrix, num_packets: int) -> BSCSRMatrix:
             [bs.flags, np.zeros((pad, bs.flags.shape[1]), dtype=bs.flags.dtype)]
         ),
     )
+
+
+# ---------------------------------------------------------------------------
+# Fused single-stream packet layout (see module docstring diagram)
+# ---------------------------------------------------------------------------
+
+STREAM_LAYOUTS = ("split", "fused")
+
+
+def fused_word_counts(
+    block_size: int, value_format: ValueFormat | str, col_dtype
+) -> Tuple[int, int, int]:
+    """(flag, col, val) int32 words per fused packet of ``block_size`` nnz."""
+    fmt = FORMATS[value_format] if isinstance(value_format, str) else value_format
+    col_bytes = np.dtype(col_dtype).itemsize
+    val_bytes = int(fmt.bytes_per_value)
+    if block_size % FLAG_WORD_BITS:
+        raise ValueError("block size must be a multiple of 32")
+    if (block_size * col_bytes) % 4 or (block_size * val_bytes) % 4:
+        raise ValueError("block size must pack cols/vals into whole int32 words")
+    return (
+        block_size // FLAG_WORD_BITS,
+        block_size * col_bytes // 4,
+        block_size * val_bytes // 4,
+    )
+
+
+def fuse_words(
+    vals: np.ndarray, cols: np.ndarray, flags: np.ndarray
+) -> np.ndarray:
+    """Pack split ``(..., B)``/``(..., B//32)`` arrays into fused int32 words.
+
+    The single definition of the fused word layout (``flags | cols | vals``
+    per packet row, little-endian sub-words): every byte lands unchanged via
+    ``view(int32)``, so ``defuse_stream`` round-trips losslessly and the
+    in-kernel decode (`kernels/bscsr_topk_spmv._decode_fused_tile`)
+    reconstructs bit-identical operands.
+    """
+    flag_w = np.ascontiguousarray(flags)
+    col_w = np.ascontiguousarray(cols).view(np.int32)
+    val_w = np.ascontiguousarray(vals).view(np.int32)
+    return np.concatenate([flag_w, col_w, val_w], axis=-1)
+
+
+def fuse_stream(bs: BSCSRMatrix) -> np.ndarray:
+    """A stream's fused ``(P, W)`` int32 word form (see :func:`fuse_words`)."""
+    return fuse_words(bs.vals, bs.cols, bs.flags)
+
+
+def defuse_stream(
+    words: np.ndarray,
+    block_size: int,
+    value_format: ValueFormat | str,
+    col_dtype,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Fused ``(P, W)`` words -> ``(vals, cols, flags)`` split arrays (host)."""
+    fmt = FORMATS[value_format] if isinstance(value_format, str) else value_format
+    wf, wc, wv = fused_word_counts(block_size, fmt, col_dtype)
+    if words.shape[-1] != wf + wc + wv:
+        raise ValueError(
+            f"fused stream width {words.shape[-1]} != expected {wf + wc + wv} "
+            f"(B={block_size}, fmt={fmt.name}, cols={np.dtype(col_dtype).name})"
+        )
+    flags = np.ascontiguousarray(words[..., :wf])
+    cols = np.ascontiguousarray(words[..., wf : wf + wc]).view(np.dtype(col_dtype))
+    vals = np.ascontiguousarray(words[..., wf + wc :]).view(fmt.np_dtype)
+    return vals, cols, flags
 
 
 INVALID_ROW = np.int32(np.iinfo(np.int32).max)

@@ -39,6 +39,15 @@ class ValueFormat:
         return {"float32": 4, "bfloat16": 2, "int8": 1, "int16": 2}[self.storage_dtype]
 
     @property
+    def np_dtype(self) -> np.dtype:
+        """Host-side numpy dtype of the stored values (bf16 via ml_dtypes)."""
+        if self.storage_dtype == "bfloat16":
+            import ml_dtypes  # jax dependency; host encode/decode of bf16 words
+
+            return np.dtype(ml_dtypes.bfloat16)
+        return np.dtype(self.storage_dtype)
+
+    @property
     def scale(self) -> float:
         """Multiplier turning stored integers back into real values."""
         return 2.0 ** (-self.frac_bits) if self.is_fixed_point else 1.0

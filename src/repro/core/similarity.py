@@ -33,6 +33,8 @@ class SimilaritySearchStats:
     tombstone_count: int = 0      # retired (tombstoned) candidate slots
     deleted_rows: int = 0         # globally tombstoned row ids
     version: int = 0              # snapshot version counter
+    stream_layout: str = "split"  # fused (one burst/step) | split (3 arrays)
+    last_refresh_repadded: int = 0  # partitions re-padded by the last snapshot
 
 
 class SparseEmbeddingIndex:
@@ -118,6 +120,11 @@ class SparseEmbeddingIndex:
         tile-packets — no re-encode of the existing stream.
         """
         embeddings = np.atleast_2d(np.asarray(embeddings, np.float32))
+        if embeddings.shape[1] != self.csr.shape[1]:
+            raise ValueError(
+                f"embedding width {embeddings.shape[1]} != index width "
+                f"{self.csr.shape[1]}"
+            )
         m_keep = min(nnz_per_row or self.nnz_per_row, embeddings.shape[1])
         sparse = bscsr_lib.sparsify_topm(embeddings, m_keep)
         rows = [
@@ -154,4 +161,6 @@ class SparseEmbeddingIndex:
             tombstone_count=packed.tombstone_count,
             deleted_rows=self.index.deleted_rows,
             version=self.index.version,
+            stream_layout=packed.stream_layout,
+            last_refresh_repadded=self.index.last_refresh_repadded,
         )

@@ -46,8 +46,10 @@ class TopKSpMVConfig:
     block_size: int = 256          # B (nnz per tile-packet)
     value_format: str = "F32"      # F32 | BF16 | Q15 | Q7
     packets_per_step: int = 2      # T
-    gather_mode: str = "take"      # take | onehot
+    gather_mode: str = "auto"      # take | onehot | auto (per-backend microbench)
     inner_loop: str = "linear"     # linear | legacy (+ mixed, for parity tests)
+    stream_layout: str = "fused"   # fused (one burst/step) | split (legacy 3-array)
+    incremental_snapshots: bool = True  # mutable index: re-pad only mutated parts
     interpret: Optional[bool] = None  # None -> interpret unless on real TPU
 
     def resolve_partitions(self, n_rows: int) -> int:
@@ -90,6 +92,7 @@ def build_index(csr: bscsr_lib.CSRMatrix, config: TopKSpMVConfig) -> TopKSpMVInd
         block_size=config.block_size,
         value_format=config.value_format,
         packets_multiple=config.packets_per_step,
+        stream_layout=config.stream_layout,
     )
     return TopKSpMVIndex(packed=packed, config=config)
 
@@ -119,11 +122,17 @@ class MutableTopKSpMVIndex:
     churn transiently costs candidate slots (delta fraction and tombstone
     count are exposed for compaction policies).
 
-    Cost model: mutations never *re-encode* existing packets, but each
-    update batch re-pads and re-stacks the (C, P, B) snapshot arrays — an
-    O(stream bytes) host memcpy.  Batch updates accordingly; incremental
-    (per-partition) snapshot reuse is a ROADMAP follow-up alongside
-    concurrent compaction.
+    Cost model: mutations never *re-encode* existing packets, and with
+    ``config.incremental_snapshots`` (the default) a refresh re-pads (and,
+    for the fused layout, re-fuses) ONLY the partitions whose stream mutated
+    since the last snapshot — unmutated partitions reuse their cached padded
+    arrays (``last_refresh_repadded`` counts re-padded partitions; a growth
+    of the common step-aligned packet count forces an all-partition re-pad).
+    The final ``np.stack`` into fresh snapshot arrays is still one
+    O(index bytes) memcpy per refresh — required so frozen older snapshots
+    are never aliased; eliminating it via copy-on-write stacked buffers is
+    the ROADMAP follow-up.  ``incremental_snapshots=False`` restores the
+    legacy re-pad-everything behavior for comparison.
     """
 
     def __init__(self, csr: bscsr_lib.CSRMatrix, config: TopKSpMVConfig):
@@ -163,12 +172,48 @@ class MutableTopKSpMVIndex:
         self._version = -1
         self._packed: Optional[kernel_ops.PackedPartitions] = None
         self._live_csr_cache = None  # (version, (csr, gids))
+        self._reset_padded_cache()
+        self.last_refresh_repadded = 0   # partitions re-padded by the last refresh
+        self.total_repadded = 0
         self._refresh()
+
+    def _reset_padded_cache(self) -> None:
+        """Invalidate the per-partition padded-stream (+ fused words) cache."""
+        c = len(self._streams)
+        self._dirty = set(range(c))
+        self._padded_streams = [None] * c
+        self._padded_words = [None] * c
+        self._padded_max_p = -1
 
     # -- snapshot bookkeeping ------------------------------------------------
 
     def _refresh(self) -> None:
-        """Swap in a fresh immutable snapshot (bumps the version counter)."""
+        """Swap in a fresh immutable snapshot (bumps the version counter).
+
+        Incremental by default: padded per-partition streams (and, for the
+        fused layout, their fused word forms) are cached, so only partitions
+        whose stream mutated since the last snapshot pay a re-pad/re-fuse —
+        unless the common step-aligned packet count changed, which re-pads
+        everyone.  The snapshot arrays themselves are freshly stacked every
+        time, so frozen older snapshots are never aliased by later updates.
+        """
+        fused = self.config.stream_layout == "fused"
+        mult = self.config.packets_per_step
+        max_p = max(e.num_packets for e in self._streams)
+        max_p = max(-(-max_p // mult) * mult, mult)
+        if not self.config.incremental_snapshots or max_p != self._padded_max_p:
+            dirty = set(range(len(self._streams)))
+        else:
+            dirty = self._dirty
+        for ci in sorted(dirty):
+            padded = bscsr_lib.pad_packets(self._streams[ci], max_p)
+            self._padded_streams[ci] = padded
+            self._padded_words[ci] = bscsr_lib.fuse_stream(padded) if fused else None
+        self._padded_max_p = max_p
+        self._dirty = set()
+        self.last_refresh_repadded = len(dirty)
+        self.total_repadded += len(dirty)
+
         num_slots = np.array([len(s) for s in self._slots], dtype=np.int32)
         width = max(int(num_slots.max()) if num_slots.size else 0, 1)
         slot_map = np.full(
@@ -179,12 +224,13 @@ class MutableTopKSpMVIndex:
                 slot_map[ci, : len(slots)] = np.asarray(slots, dtype=np.int32)
         self._deleted.grow(self._next_gid)
         tombs = self._deleted.bits[: max(self._next_gid, 1)].copy()
-        self._packed = kernel_ops.stack_streams(
-            self._streams,
+        self._packed = kernel_ops.stack_padded_streams(
+            self._padded_streams,
             self._plan,
             self._n_cols,
             self._live_nnz,
-            packets_multiple=self.config.packets_per_step,
+            stream_layout=self.config.stream_layout,
+            words=self._padded_words if fused else None,
             slot_to_row=slot_map,
             num_slots=num_slots,
             n_rows_total=self._next_gid,
@@ -253,6 +299,7 @@ class MutableTopKSpMVIndex:
                 rows, self._n_cols, self.config.block_size, self._fmt
             )
             self._streams[ci] = bscsr_lib.append_packets(self._streams[ci], delta)
+            self._dirty.add(ci)
             slots = self._slots[ci]
             # The previously-open sentinel becomes a dead candidate slot.
             slots.append(int(bscsr_lib.INVALID_ROW))
@@ -368,6 +415,7 @@ class MutableTopKSpMVIndex:
         self._streams = streams
         self._base_packets = max(e.num_packets for e in streams)
         self._plan = plan
+        self._reset_padded_cache()
         self._slots = [
             [int(g) for g in gids[start : start + size]]
             for start, size in zip(plan.row_starts, plan.rows_per_partition)
@@ -471,10 +519,15 @@ def distributed_topk_spmv_fn(
     core_sharded = NamedSharding(mesh, P(shard_axis))
     replicated = NamedSharding(mesh, P())
 
+    # One fused word stream per core, or the legacy three split streams.
+    if packed.stream_layout == "fused":
+        host_arrays = (packed.fused_words(),)
+    else:
+        host_arrays = (packed.vals, packed.cols, packed.flags)
     device_arrays = tuple(
-        jax.device_put(jnp.asarray(a), core_sharded)
-        for a in (packed.vals, packed.cols, packed.flags)
+        jax.device_put(jnp.asarray(a), core_sharded) for a in host_arrays
     )
+    n_streams = len(device_arrays)
     row_starts = jax.device_put(jnp.asarray(packed.row_starts), core_sharded)
     rows_per = jax.device_put(jnp.asarray(packed.candidate_slots), core_sharded)
     slot_to_row = None
@@ -485,42 +538,44 @@ def distributed_topk_spmv_fn(
         tombstones = jax.device_put(jnp.asarray(packed.tombstones), replicated)
     max_rows = packed.max_slots
     interpret = cfg.resolve_interpret()
+    # Resolve "auto" eagerly: the microbenchmark must not run under tracing.
+    gather_mode = kernel_ops.resolve_gather_mode(cfg.gather_mode)
 
-    def _local(x, vals, cols, flags):
+    def _local(x, *streams):
         from repro.kernels.bscsr_topk_spmv import (
             bscsr_topk_spmv,
             bscsr_topk_spmv_multiquery,
         )
 
         kernel = bscsr_topk_spmv_multiquery if batched else bscsr_topk_spmv
-        kwargs = {} if batched else {"gather_mode": cfg.gather_mode}
+        kwargs = {} if batched else {"gather_mode": gather_mode}
         return kernel(
             x,
-            vals,
-            cols,
-            flags,
+            *streams,
             k=cfg.k,
             n_rows=max_rows,
             packets_per_step=cfg.packets_per_step,
             fmt_name=packed.value_format.name,
             inner_loop=cfg.inner_loop,
+            stream_layout=packed.stream_layout,
+            block_size=packed.block_size,
             interpret=interpret,
             **kwargs,
         )
 
     @partial(
         jax.jit,
-        in_shardings=(replicated, core_sharded, core_sharded, core_sharded),
+        in_shardings=(replicated,) + (core_sharded,) * n_streams,
         out_shardings=(replicated, replicated),
     )
-    def query(x, vals, cols, flags):
+    def query(x, *streams):
         lv, lr = _shard_map(
             _local,
             mesh=mesh,
-            in_specs=(P(), P(shard_axis), P(shard_axis), P(shard_axis)),
+            in_specs=(P(),) + (P(shard_axis),) * n_streams,
             out_specs=(P(shard_axis), P(shard_axis)),
             **_SHARD_MAP_KW,
-        )(x, vals, cols, flags)
+        )(x, *streams)
         # c*k candidates: tiny; XLA inserts one small all-gather for the merge.
         finalize = (
             kernel_ops.finalize_candidates_batched

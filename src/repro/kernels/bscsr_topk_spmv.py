@@ -38,6 +38,24 @@ changes only the float summation order.
 
 The kernel never writes row scores to HBM: per core only k (value, row) pairs
 leave the chip, which is the paper's key bandwidth argument (§III-A).
+
+Stream layouts (``stream_layout``):
+
+  "split"   vals / cols / flags as three BlockSpec streams per grid step —
+            the original three-array pipeline, kept as the parity fallback.
+  "fused"   one contiguous int32 word stream per core (``bscsr.fuse_stream``:
+            ``flags | cols | vals`` per packet — the TPU analogue of the
+            paper's single 512-bit HBM transaction).  Every grid step then
+            pipelines exactly ONE VMEM block from ONE contiguous HBM region;
+            cols (int16 pairs) and vals (bf16/int16 pairs, int8 quads, or f32
+            bitcast) are recovered in-kernel with shift/mask bit-ops.  The
+            decode is bit-exact, so fused results are bit-identical to split
+            on every inner_loop mode.
+
+Stage-1 gather hardening: padded/sentinel stream entries carry whatever col
+id the encoder (or a corrupted segment) left behind, so the x-gather uses
+explicit clip+mask semantics — out-of-range ids read x[clip] and are zeroed —
+instead of relying on backend-specific out-of-bounds behavior.
 """
 from __future__ import annotations
 
@@ -74,6 +92,70 @@ def _unpack_flags_tile(words: jnp.ndarray, tb: int) -> jnp.ndarray:
     shifts = jnp.arange(FLAG_WORD_BITS, dtype=jnp.uint32)
     bits = (w[:, None] >> shifts[None, :]) & jnp.uint32(1)
     return bits.reshape(tb).astype(jnp.int32)
+
+
+def _decode_fused_tile(
+    words, block: int, fmt: ValueFormat, col_words: int
+):
+    """Bit-exact decode of one fused tile ref: (1, T, W) -> (flag words, c, v).
+
+    Sections per packet row are ``flags | cols | vals`` (bscsr.fuse_stream);
+    sub-words are little-endian, so value ``2i`` sits in the low half of word
+    ``i`` — which is exactly ``lax.bitcast_convert_type``'s narrow-dtype
+    layout (int32 (N,) -> int16 (N, 2) / int8 (N, 4) / bf16 (N, 2)), so one
+    bitcast recovers each section instead of a shift/mask/interleave chain
+    (the shift form, e.g. ``(w << 16) >> 16`` for the low int16, is the
+    fallback if a backend lacks narrow bitcasts).  Returns the packed flag
+    words (T, B/32) plus int32 cols and f32 values of length T*B —
+    bit-identical to reading the split arrays.
+    """
+    t = words.shape[1]
+    tb = t * block
+    wf = block // FLAG_WORD_BITS
+    # Static sub-range loads of the one streamed block ref (no full-block
+    # materialize + copy-slices: each section is read exactly once).
+    flag_words = words[0, :, :wf]
+    cw = words[0, :, wf : wf + col_words].reshape(-1)
+    vw = words[0, :, wf + col_words :].reshape(-1)
+
+    if col_words == block:                       # int32 col ids: words verbatim
+        c = cw
+    else:   # int16 pairs (ids < 2**15; the gather consumes int16 directly)
+        c = jax.lax.bitcast_convert_type(cw, jnp.int16).reshape(tb)
+
+    if fmt.storage_dtype == "float32":
+        v = jax.lax.bitcast_convert_type(vw, jnp.float32)
+    elif fmt.storage_dtype == "bfloat16":
+        v = jax.lax.bitcast_convert_type(vw, jnp.bfloat16).reshape(tb)
+        v = v.astype(jnp.float32)
+    elif fmt.storage_dtype == "int16":
+        v = jax.lax.bitcast_convert_type(vw, jnp.int16).reshape(tb)
+        v = v.astype(jnp.float32) * jnp.float32(fmt.scale)
+    else:                                        # int8: four lanes per word
+        v = jax.lax.bitcast_convert_type(vw, jnp.int8).reshape(tb)
+        v = v.astype(jnp.float32) * jnp.float32(fmt.scale)
+    return flag_words, c, v
+
+
+def _gather_x(x: jnp.ndarray, c: jnp.ndarray, gather_mode: str) -> jnp.ndarray:
+    """Stage-1 x-gather with explicit clip+mask out-of-range semantics.
+
+    Padding/sentinel stream entries carry zero values but arbitrary col ids;
+    clipping the gather and zeroing out-of-range lanes keeps the result
+    defined (and NaN-free) whatever the padding left behind, on x of shape
+    (M,) or a (Q, M) batch (gathered along the last axis).
+    """
+    m = x.shape[-1]
+    oob = (c < 0) | (c >= m)
+    if gather_mode == "onehot":
+        # MXU-gather: one-hot(cols) @ x; oob lanes get an all-zero one-hot row.
+        sel = (c[:, None] == jnp.arange(m, dtype=jnp.int32)[None, :])
+        sel = sel.astype(jnp.float32)
+        if x.ndim == 2:                                        # (Q, M) -> (Q, TB)
+            return jnp.dot(x, sel.T, preferred_element_type=jnp.float32)
+        return jnp.dot(sel, x, preferred_element_type=jnp.float32)
+    xv = jnp.take(x, jnp.clip(c, 0, m - 1), axis=x.ndim - 1)
+    return jnp.where(oob if x.ndim == 1 else oob[None, :], 0.0, xv)
 
 
 def _segment_sums_onehot(prods: jnp.ndarray, seg: jnp.ndarray, tb: int) -> jnp.ndarray:
@@ -138,25 +220,41 @@ def _scratch_update_threshold(acc_v, acc_r, cand_v, cand_r, k: int):
     return mv, jnp.take(pool_r, mi)
 
 
+def _split_stage1(vals_ref, cols_ref, tb: int, fmt: ValueFormat):
+    """Legacy three-array stage-1 load: dequantize vals; cols stay at storage
+    width (the gather consumes int16/int32 ids directly)."""
+    v = vals_ref[...].reshape(tb)
+    if fmt.is_fixed_point:
+        v = v.astype(jnp.float32) * jnp.float32(fmt.scale)
+    else:
+        v = v.astype(jnp.float32)
+    return v, cols_ref[...].reshape(tb)
+
+
 def _topk_spmv_kernel(
     x_ref,            # (M,) f32                      VMEM (URAM analogue)
-    vals_ref,         # (1, T, B) storage dtype       VMEM tile-packet block
-    cols_ref,         # (1, T, B) int16/int32
-    flags_ref,        # (1, T, B//32) int32
-    topv_ref,         # out (1, k) f32
-    topr_ref,         # out (1, k) int32
-    acc_v,            # scratch VMEM (k,) f32         top-k value scratchpad
-    acc_r,            # scratch VMEM (k,) i32         top-k row scratchpad
-    carry_row,        # scratch SMEM (1,) i32         current open row id
-    carry_sum,        # scratch SMEM (1,) f32         partial sum of open row
-    *,
+    *refs,            # split: vals (1,T,B), cols (1,T,B), flags (1,T,B//32)
+                      # fused: words (1,T,W) int32 — ONE contiguous stream
+                      # then outputs topv (1,k) f32, topr (1,k) int32 and
+                      # scratch acc_v (k,) f32, acc_r (k,) i32,
+                      # carry_row (1,) i32 SMEM, carry_sum (1,) f32 SMEM
     k: int,
     n_rows: int,
     num_steps: int,
     fmt: ValueFormat,
     gather_mode: str,
     inner_loop: str,
+    stream_layout: str,
+    block: int,
+    col_words: int,
 ):
+    if stream_layout == "fused":
+        words_ref, topv_ref, topr_ref, acc_v, acc_r, carry_row, carry_sum = refs
+        num_t = words_ref.shape[1]
+    else:
+        (vals_ref, cols_ref, flags_ref, topv_ref, topr_ref,
+         acc_v, acc_r, carry_row, carry_sum) = refs
+        num_t = vals_ref.shape[1]
     linear_seg, linear_topk = _inner_loop_flags(inner_loop)
     step = pl.program_id(1)
 
@@ -168,26 +266,19 @@ def _topk_spmv_kernel(
         carry_row[0] = -1
         carry_sum[0] = 0.0
 
-    tb = vals_ref.shape[1] * vals_ref.shape[2]
+    tb = num_t * block
 
-    # ---- stage 1: load packet, dequantize, gather x, multiply ----
-    v = vals_ref[...].reshape(tb)
-    if fmt.is_fixed_point:
-        v = v.astype(jnp.float32) * jnp.float32(fmt.scale)
+    # ---- stage 1: load packet(s), decode, gather x, multiply ----
+    if stream_layout == "fused":
+        flag_words, c, v = _decode_fused_tile(words_ref, block, fmt, col_words)
     else:
-        v = v.astype(jnp.float32)
-    c = cols_ref[...].reshape(tb).astype(jnp.int32)
+        v, c = _split_stage1(vals_ref, cols_ref, tb, fmt)
+        flag_words = flags_ref[...]
     x = x_ref[...].astype(jnp.float32)
-    if gather_mode == "onehot":
-        # MXU-gather: one-hot(cols) @ x. Trades FLOPs for gather ports.
-        sel = (c[:, None] == jnp.arange(x.shape[0], dtype=jnp.int32)[None, :])
-        xv = jnp.dot(sel.astype(jnp.float32), x, preferred_element_type=jnp.float32)
-    else:
-        xv = jnp.take(x, c)
-    prods = v * xv
+    prods = v * _gather_x(x, c, gather_mode)
 
     # ---- stage 2: row-aggregate (segmented sum, O(TB) by default) ----
-    f = _unpack_flags_tile(flags_ref[...], tb)
+    f = _unpack_flags_tile(flag_words, tb)
     seg = jnp.cumsum(f)                         # (tb,) segment id, 0 = carry row
     s_last = seg[-1]
     seg_ids = jnp.arange(tb + 1, dtype=jnp.int32)
@@ -225,18 +316,43 @@ def _topk_spmv_kernel(
         topr_ref[...] = acc_r[...].reshape(1, k)
 
 
+def _fused_geometry(width: int, block: int, fmt: ValueFormat) -> int:
+    """Validate a fused stream width and return its col-section word count."""
+    wf = block // FLAG_WORD_BITS
+    wv = block * int(fmt.bytes_per_value) // 4
+    col_words = width - wf - wv
+    if col_words not in (block // 2, block):
+        raise ValueError(
+            f"fused stream width {width} inconsistent with block={block}, "
+            f"fmt={fmt.name}: col section would be {col_words} words"
+        )
+    return col_words
+
+
+def _stream_specs(stream_layout: str, t: int, block: int, width: int):
+    """BlockSpecs for the matrix stream(s): one fused block or three split."""
+    if stream_layout == "fused":
+        return [pl.BlockSpec((1, t, width), lambda c, i: (c, i, 0))]
+    w = block // FLAG_WORD_BITS
+    return [
+        pl.BlockSpec((1, t, block), lambda c, i: (c, i, 0)),
+        pl.BlockSpec((1, t, block), lambda c, i: (c, i, 0)),
+        pl.BlockSpec((1, t, w), lambda c, i: (c, i, 0)),
+    ]
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
         "k", "n_rows", "packets_per_step", "fmt_name", "gather_mode",
-        "inner_loop", "interpret",
+        "inner_loop", "stream_layout", "block_size", "interpret",
     ),
 )
 def bscsr_topk_spmv(
     x: jnp.ndarray,        # (M,) float32 query embedding
-    vals: jnp.ndarray,     # (C, P, B) storage dtype
-    cols: jnp.ndarray,     # (C, P, B) int16/int32
-    flags: jnp.ndarray,    # (C, P, B//32) int32
+    vals: jnp.ndarray,     # split: (C, P, B) storage dtype; fused: (C, P, W) i32
+    cols: jnp.ndarray = None,   # (C, P, B) int16/int32 (split only)
+    flags: jnp.ndarray = None,  # (C, P, B//32) int32   (split only)
     *,
     k: int,
     n_rows: int,           # rows per partition (uniform; pad rows if ragged)
@@ -244,15 +360,31 @@ def bscsr_topk_spmv(
     fmt_name: str = "F32",
     gather_mode: str = "take",
     inner_loop: str = "linear",
+    stream_layout: str = "split",
+    block_size: int = None,  # required for "fused" (W hides B); ignored otherwise
     interpret: bool = True,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Run the multi-core kernel; returns per-core (vals, local rows), (C, k)."""
+    """Run the multi-core kernel; returns per-core (vals, local rows), (C, k).
+
+    With ``stream_layout="fused"`` pass the ``bscsr.fuse_stream`` word array
+    as ``vals`` (``cols``/``flags`` stay ``None``): each grid step then
+    pipelines ONE contiguous block instead of three.
+    """
     fmt = FORMATS[fmt_name]
-    n_cores, n_packets, block = vals.shape
+    n_cores, n_packets, last = vals.shape
+    if stream_layout == "fused":
+        if block_size is None:
+            raise ValueError("stream_layout='fused' requires block_size")
+        block, width = block_size, last
+        col_words = _fused_geometry(width, block, fmt)
+        streams = (vals,)
+    else:
+        block, width = last, last
+        col_words = 0
+        streams = (vals, cols, flags)
     t = packets_per_step
     assert n_packets % t == 0, "pad packet count to a multiple of packets_per_step"
     num_steps = n_packets // t
-    w = block // FLAG_WORD_BITS
 
     kernel = functools.partial(
         _topk_spmv_kernel,
@@ -262,6 +394,9 @@ def bscsr_topk_spmv(
         fmt=fmt,
         gather_mode=gather_mode,
         inner_loop=inner_loop,
+        stream_layout=stream_layout,
+        block=block,
+        col_words=col_words,
     )
     grid = (n_cores, num_steps)
     return pl.pallas_call(
@@ -269,9 +404,7 @@ def bscsr_topk_spmv(
         grid=grid,
         in_specs=[
             pl.BlockSpec((x.shape[0],), lambda c, i: (0,)),
-            pl.BlockSpec((1, t, block), lambda c, i: (c, i, 0)),
-            pl.BlockSpec((1, t, block), lambda c, i: (c, i, 0)),
-            pl.BlockSpec((1, t, w), lambda c, i: (c, i, 0)),
+            *_stream_specs(stream_layout, t, block, width),
         ],
         out_specs=[
             pl.BlockSpec((1, k), lambda c, i: (c, 0)),
@@ -288,7 +421,7 @@ def bscsr_topk_spmv(
             pltpu.SMEM((1,), jnp.float32),
         ],
         interpret=interpret,
-    )(x, vals, cols, flags)
+    )(x, *streams)
 
 
 # ---------------------------------------------------------------------------
@@ -306,22 +439,27 @@ def bscsr_topk_spmv(
 
 def _topk_spmv_mq_kernel(
     x_ref,            # (Q, M) f32
-    vals_ref,         # (1, T, B)
-    cols_ref,         # (1, T, B)
-    flags_ref,        # (1, T, B//32)
-    topv_ref,         # out (1, Q, k)
-    topr_ref,         # out (1, Q, k)
-    acc_v,            # scratch VMEM (Q, k) f32
-    acc_r,            # scratch VMEM (Q, k) i32
-    carry_row,        # scratch SMEM (1,) i32
-    carry_sum,        # scratch VMEM (Q,) f32   (per-query open-row partial)
-    *,
+    *refs,            # split: vals (1,T,B), cols (1,T,B), flags (1,T,B//32)
+                      # fused: words (1,T,W) int32 — ONE contiguous stream
+                      # then outputs topv/topr (1,Q,k) and scratch acc_v (Q,k)
+                      # f32, acc_r (Q,k) i32, carry_row (1,) i32 SMEM,
+                      # carry_sum (Q,) f32 VMEM (per-query open-row partial)
     k: int,
     n_rows: int,
     num_steps: int,
     fmt: ValueFormat,
     inner_loop: str,
+    stream_layout: str,
+    block: int,
+    col_words: int,
 ):
+    if stream_layout == "fused":
+        words_ref, topv_ref, topr_ref, acc_v, acc_r, carry_row, carry_sum = refs
+        num_t = words_ref.shape[1]
+    else:
+        (vals_ref, cols_ref, flags_ref, topv_ref, topr_ref,
+         acc_v, acc_r, carry_row, carry_sum) = refs
+        num_t = vals_ref.shape[1]
     linear_seg, linear_topk = _inner_loop_flags(inner_loop)
     step = pl.program_id(1)
     nq = x_ref.shape[0]
@@ -333,17 +471,16 @@ def _topk_spmv_mq_kernel(
         carry_row[0] = -1
         carry_sum[...] = jnp.zeros((nq,), jnp.float32)
 
-    tb = vals_ref.shape[1] * vals_ref.shape[2]
-    v = vals_ref[...].reshape(tb)
-    if fmt.is_fixed_point:
-        v = v.astype(jnp.float32) * jnp.float32(fmt.scale)
+    tb = num_t * block
+    if stream_layout == "fused":
+        flag_words, c, v = _decode_fused_tile(words_ref, block, fmt, col_words)
     else:
-        v = v.astype(jnp.float32)
-    c = cols_ref[...].reshape(tb).astype(jnp.int32)
-    xv = jnp.take(x_ref[...].astype(jnp.float32), c, axis=1)   # (Q, TB)
+        v, c = _split_stage1(vals_ref, cols_ref, tb, fmt)
+        flag_words = flags_ref[...]
+    xv = _gather_x(x_ref[...].astype(jnp.float32), c, "take")  # (Q, TB)
     prods = v[None, :] * xv                                    # (Q, TB)
 
-    f = _unpack_flags_tile(flags_ref[...], tb)
+    f = _unpack_flags_tile(flag_words, tb)
     seg = jnp.cumsum(f)
     s_last = seg[-1]
     seg_ids = jnp.arange(tb + 1, dtype=jnp.int32)
@@ -396,42 +533,53 @@ def _topk_spmv_mq_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "k", "n_rows", "packets_per_step", "fmt_name", "inner_loop", "interpret",
+        "k", "n_rows", "packets_per_step", "fmt_name", "inner_loop",
+        "stream_layout", "block_size", "interpret",
     ),
 )
 def bscsr_topk_spmv_multiquery(
     x: jnp.ndarray,        # (Q, M) float32 query batch
-    vals: jnp.ndarray,     # (C, P, B)
-    cols: jnp.ndarray,
-    flags: jnp.ndarray,
+    vals: jnp.ndarray,     # split: (C, P, B); fused: (C, P, W) int32 words
+    cols: jnp.ndarray = None,
+    flags: jnp.ndarray = None,
     *,
     k: int,
     n_rows: int,
     packets_per_step: int = 2,
     fmt_name: str = "F32",
     inner_loop: str = "linear",
+    stream_layout: str = "split",
+    block_size: int = None,
     interpret: bool = True,
 ):
     """Multi-query kernel; returns per-core (vals, rows) of shape (C, Q, k)."""
     fmt = FORMATS[fmt_name]
-    n_cores, n_packets, block = vals.shape
+    n_cores, n_packets, last = vals.shape
+    if stream_layout == "fused":
+        if block_size is None:
+            raise ValueError("stream_layout='fused' requires block_size")
+        block, width = block_size, last
+        col_words = _fused_geometry(width, block, fmt)
+        streams = (vals,)
+    else:
+        block, width = last, last
+        col_words = 0
+        streams = (vals, cols, flags)
     nq = x.shape[0]
     t = packets_per_step
     assert n_packets % t == 0
     num_steps = n_packets // t
-    w = block // FLAG_WORD_BITS
     kernel = functools.partial(
         _topk_spmv_mq_kernel, k=k, n_rows=n_rows, num_steps=num_steps, fmt=fmt,
-        inner_loop=inner_loop,
+        inner_loop=inner_loop, stream_layout=stream_layout, block=block,
+        col_words=col_words,
     )
     return pl.pallas_call(
         kernel,
         grid=(n_cores, num_steps),
         in_specs=[
             pl.BlockSpec((nq, x.shape[1]), lambda c, i: (0, 0)),
-            pl.BlockSpec((1, t, block), lambda c, i: (c, i, 0)),
-            pl.BlockSpec((1, t, block), lambda c, i: (c, i, 0)),
-            pl.BlockSpec((1, t, w), lambda c, i: (c, i, 0)),
+            *_stream_specs(stream_layout, t, block, width),
         ],
         out_specs=[
             pl.BlockSpec((1, nq, k), lambda c, i: (c, 0, 0)),
@@ -448,4 +596,4 @@ def bscsr_topk_spmv_multiquery(
             pltpu.VMEM((nq,), jnp.float32),
         ],
         interpret=interpret,
-    )(x, vals, cols, flags)
+    )(x, *streams)

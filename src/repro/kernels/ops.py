@@ -15,11 +15,28 @@ arrays translate slots back to the logical index:
 Both are applied by ``finalize_candidates`` before the merge; a pure-base
 index (``pack_partitions``) leaves them ``None`` and uses the affine
 ``row_starts`` mapping.
+
+Stream layouts
+--------------
+
+``stream_layout="fused"`` additionally carries the fused single-stream form
+(``words``: each packet's ``flags | cols | vals`` packed into one contiguous
+int32 word row — see the diagram in ``core/bscsr.py``), and the dispatch
+functions ship ONLY that one array to the kernel, so every grid step
+pipelines a single VMEM block from a single contiguous HBM region instead of
+three separately-strided ones.  The split ``vals``/``cols``/``flags`` arrays
+are always kept host-side (the jnp reference oracle and the delta-append
+machinery read them); total stream bytes are identical between layouts —
+fused changes the burst *shape*, not the byte count:
+
+  bytes/nnz (B = 256, int16 idx):  F32 6.125 | BF16 4.125 | Q15 4.125
+  | Q7 3.125 — vs 12 for naive COO; fused == split, in ONE burst per step.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -52,6 +69,8 @@ class PackedPartitions:
     nnz: int                  # live nnz (tombstoned stream entries excluded)
     block_size: int
     value_format: ValueFormat
+    stream_layout: str = "split"               # "split" | "fused"
+    words: Optional[np.ndarray] = None         # (C, P, W) fused word streams
     # --- segmented-extension fields (None for a pure-base index) ---
     slot_to_row: Optional[np.ndarray] = None   # (C, L) int32 slot -> global row
     num_slots: Optional[np.ndarray] = None     # (C,) candidate slots per core
@@ -107,6 +126,53 @@ class PackedPartitions:
         """Effective bytes streamed per *live* nnz (grows with delta/dead mass)."""
         return self.stream_bytes / max(self.nnz, 1)
 
+    def fused_words(self) -> np.ndarray:
+        """The (C, P, W) fused word streams; derived on the fly if not carried."""
+        if self.words is not None:
+            return self.words
+        return bscsr_lib.fuse_words(self.vals, self.cols, self.flags)
+
+
+def stack_padded_streams(
+    padded: Sequence[bscsr_lib.BSCSRMatrix],
+    plan: partition_lib.PartitionPlan,
+    n_cols: int,
+    nnz: int,
+    stream_layout: str = "split",
+    words: Optional[Sequence[np.ndarray]] = None,
+    **segment_fields,
+) -> PackedPartitions:
+    """Stack already-padded per-partition streams into one snapshot.
+
+    The incremental mutable-index path calls this directly with its cached
+    padded streams (and cached per-partition fused ``words``), so only the
+    mutated partitions paid a re-pad/re-fuse.  With ``stream_layout="fused"``
+    and no precomputed ``words``, each partition is fused here.
+    """
+    if stream_layout not in bscsr_lib.STREAM_LAYOUTS:
+        raise ValueError(
+            f"stream_layout must be one of {bscsr_lib.STREAM_LAYOUTS}, "
+            f"got {stream_layout!r}"
+        )
+    words_arr = None
+    if stream_layout == "fused":
+        if words is None:
+            words = [bscsr_lib.fuse_stream(e) for e in padded]
+        words_arr = np.stack(list(words))
+    return PackedPartitions(
+        vals=np.stack([e.vals for e in padded]),
+        cols=np.stack([e.cols for e in padded]),
+        flags=np.stack([e.flags for e in padded]),
+        plan=plan,
+        n_cols=n_cols,
+        nnz=nnz,
+        block_size=padded[0].block_size,
+        value_format=padded[0].value_format,
+        stream_layout=stream_layout,
+        words=words_arr,
+        **segment_fields,
+    )
+
 
 def stack_streams(
     streams: Sequence[bscsr_lib.BSCSRMatrix],
@@ -114,6 +180,7 @@ def stack_streams(
     n_cols: int,
     nnz: int,
     packets_multiple: int = 2,
+    stream_layout: str = "split",
     **segment_fields,
 ) -> PackedPartitions:
     """Pad per-partition streams to a common step-aligned packet count & stack.
@@ -126,16 +193,8 @@ def stack_streams(
     max_p = max(e.num_packets for e in streams)
     max_p = max(-(-max_p // packets_multiple) * packets_multiple, packets_multiple)
     padded = [bscsr_lib.pad_packets(e, max_p) for e in streams]
-    return PackedPartitions(
-        vals=np.stack([e.vals for e in padded]),
-        cols=np.stack([e.cols for e in padded]),
-        flags=np.stack([e.flags for e in padded]),
-        plan=plan,
-        n_cols=n_cols,
-        nnz=nnz,
-        block_size=streams[0].block_size,
-        value_format=streams[0].value_format,
-        **segment_fields,
+    return stack_padded_streams(
+        padded, plan, n_cols, nnz, stream_layout=stream_layout, **segment_fields
     )
 
 
@@ -145,6 +204,7 @@ def pack_partitions(
     block_size: int = 256,
     value_format: ValueFormat | str = "F32",
     packets_multiple: int = 2,
+    stream_layout: str = "split",
 ) -> PackedPartitions:
     """Partition a CSR row-wise (§III-A) and BS-CSR encode each partition."""
     fmt = FORMATS[value_format] if isinstance(value_format, str) else value_format
@@ -152,7 +212,8 @@ def pack_partitions(
     parts = partition_lib.partition_csr(csr, plan)
     encoded = [bscsr_lib.encode_bscsr(p, block_size, fmt) for p in parts]
     return stack_streams(
-        encoded, plan, csr.shape[1], csr.nnz, packets_multiple=packets_multiple
+        encoded, plan, csr.shape[1], csr.nnz, packets_multiple=packets_multiple,
+        stream_layout=stream_layout,
     )
 
 
@@ -227,6 +288,72 @@ def _finalize_kwargs(packed: PackedPartitions) -> dict:
     return kw
 
 
+@functools.lru_cache(maxsize=None)
+def default_gather_mode(backend: Optional[str] = None) -> str:
+    """Pick the stage-1 x-gather flavor for this backend, measured not guessed.
+
+    One-shot microbenchmark (cached per process) of the two gather idioms at
+    a representative stage-1 shape: ``jnp.take`` (native gather ports) vs the
+    one-hot matmul (MXU gather).  TPUs with few gather ports tend to prefer
+    the matmul; CPU/GPU interpret runs prefer ``take``.
+    """
+    backend = backend or jax.default_backend()
+    m, tb = 256, 512
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(m), jnp.float32)
+    c = jnp.asarray(rng.integers(0, m, size=tb), jnp.int32)
+    ids = jnp.arange(m, dtype=jnp.int32)
+    take_fn = jax.jit(lambda x, c: jnp.take(x, c))
+    onehot_fn = jax.jit(
+        lambda x, c: jnp.dot(
+            (c[:, None] == ids[None, :]).astype(jnp.float32), x,
+            preferred_element_type=jnp.float32,
+        )
+    )
+
+    def measure(fn) -> float:
+        fn(x, c).block_until_ready()          # compile outside the timed loop
+        t0 = time.perf_counter()
+        for _ in range(30):
+            fn(x, c).block_until_ready()
+        return time.perf_counter() - t0
+
+    return "take" if measure(take_fn) <= measure(onehot_fn) else "onehot"
+
+
+def resolve_gather_mode(gather_mode: str) -> str:
+    """Map "auto" to the measured per-backend default; pass others through.
+
+    Inside a jax trace wall-clock timing is meaningless (and ``.block_until_
+    ready`` unavailable), so "auto" falls back to "take" there instead of
+    poisoning the per-process cache.
+    """
+    if gather_mode != "auto":
+        return gather_mode
+    try:
+        return default_gather_mode()
+    except AttributeError:  # called under tracing: no concrete timing possible
+        default_gather_mode.cache_clear()
+        return "take"
+
+
+def _kernel_streams(packed: PackedPartitions, stream_layout: Optional[str]):
+    """(layout, device stream args) for a dispatch call.
+
+    ``stream_layout=None`` follows the snapshot's own layout; an explicit
+    layout overrides it (deriving the fused words on the fly if the snapshot
+    carries only the split arrays — parity tests lean on this).
+    """
+    layout = stream_layout or packed.stream_layout
+    if layout == "fused":
+        return layout, (jnp.asarray(packed.fused_words()), None, None)
+    return layout, (
+        jnp.asarray(packed.vals),
+        jnp.asarray(packed.cols),
+        jnp.asarray(packed.flags),
+    )
+
+
 def topk_spmv_blocked(
     x: jnp.ndarray,
     packed: PackedPartitions,
@@ -235,20 +362,22 @@ def topk_spmv_blocked(
     packets_per_step: int = 2,
     gather_mode: str = "take",
     inner_loop: str = "linear",
+    stream_layout: Optional[str] = None,
     interpret: bool = True,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Single-device multi-core approximate Top-K SpMV via the Pallas kernel."""
+    layout, streams = _kernel_streams(packed, stream_layout)
     lv, lr = bscsr_topk_spmv(
         jnp.asarray(x, jnp.float32),
-        jnp.asarray(packed.vals),
-        jnp.asarray(packed.cols),
-        jnp.asarray(packed.flags),
+        *streams,
         k=k,
         n_rows=packed.max_slots,
         packets_per_step=packets_per_step,
         fmt_name=packed.value_format.name,
-        gather_mode=gather_mode,
+        gather_mode=resolve_gather_mode(gather_mode),
         inner_loop=inner_loop,
+        stream_layout=layout,
+        block_size=packed.block_size,
         interpret=interpret,
     )
     return finalize_candidates(lv, lr, big_k=big_k, **_finalize_kwargs(packed))
@@ -261,6 +390,7 @@ def topk_spmv_batched(
     k: int = 8,
     packets_per_step: int = 2,
     inner_loop: str = "linear",
+    stream_layout: Optional[str] = None,
     interpret: bool = True,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Q queries in ONE pass over the stream via the multi-query kernel.
@@ -270,16 +400,17 @@ def topk_spmv_batched(
     """
     if xs.ndim != 2 or xs.shape[0] == 0:
         raise ValueError(f"xs must be a non-empty (Q, M) batch, got {xs.shape}")
+    layout, streams = _kernel_streams(packed, stream_layout)
     lv, lr = bscsr_topk_spmv_multiquery(
         jnp.asarray(xs, jnp.float32),
-        jnp.asarray(packed.vals),
-        jnp.asarray(packed.cols),
-        jnp.asarray(packed.flags),
+        *streams,
         k=k,
         n_rows=packed.max_slots,
         packets_per_step=packets_per_step,
         fmt_name=packed.value_format.name,
         inner_loop=inner_loop,
+        stream_layout=layout,
+        block_size=packed.block_size,
         interpret=interpret,
     )
     return finalize_candidates_batched(

@@ -72,8 +72,9 @@ class StreamingSimilarityService:
         return out
 
     def delete(self, ids: Sequence[int]) -> None:
+        ids = list(ids)  # a one-shot iterable must not be consumed twice
         self.index.delete(ids)
-        self.rows_deleted += len(list(ids))
+        self.rows_deleted += len(ids)
         self._maybe_compact()
 
     def _maybe_compact(self) -> None:

@@ -34,6 +34,7 @@ class TopKHeadConfig:
     nnz_per_row: int = 64           # sparsification level of embedding rows
     block_size: int = 256
     value_format: str = "BF16"
+    stream_layout: str = "fused"    # one contiguous word stream per core
 
 
 class ApproxTopKHead:
@@ -54,6 +55,7 @@ class ApproxTopKHead:
                 num_partitions=self.cfg.num_partitions,
                 block_size=self.cfg.block_size,
                 value_format=self.cfg.value_format,
+                stream_layout=self.cfg.stream_layout,
             ),
         )
 

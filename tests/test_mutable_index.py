@@ -188,6 +188,75 @@ class TestSnapshots:
         )
 
 
+class TestIncrementalSnapshots:
+    """_refresh re-pads only mutated partitions (ISSUE: snapshot-refresh cost)."""
+
+    @staticmethod
+    def skewed_index(incremental=True, layout="fused"):
+        """4 partitions, partition 3 heavy: small deltas never grow max_p."""
+        rng = np.random.default_rng(20)
+        lens = np.full(64, 4, np.int64)
+        lens[48:] = 40  # partition 3 dominates the padded packet count
+        indptr = np.concatenate([[0], np.cumsum(lens)])
+        idx = np.concatenate(
+            [np.sort(rng.choice(N_COLS, size=l, replace=False)) for l in lens]
+        ).astype(np.int32)
+        data = rng.standard_normal(int(lens.sum())).astype(np.float32)
+        csr = bscsr.CSRMatrix(indptr, idx, data, (64, N_COLS))
+        cfg = TopKSpMVConfig(big_k=8, k=8, num_partitions=4, block_size=32,
+                             stream_layout=layout,
+                             incremental_snapshots=incremental)
+        return MutableTopKSpMVIndex(csr, cfg), rng
+
+    def test_single_partition_mutation_repads_one(self):
+        index, rng = self.skewed_index()
+        assert index.last_refresh_repadded == 4  # initial build pads everyone
+        index.add_rows([random_row(rng)])
+        assert index.last_refresh_repadded == 1  # only the mutated partition
+        # deletes touch only the host-side slot map: zero re-pads
+        index.delete_rows([0])
+        assert index.last_refresh_repadded == 0
+        assert index.total_repadded == 5
+
+    def test_legacy_mode_repads_all(self):
+        index, rng = self.skewed_index(incremental=False)
+        index.add_rows([random_row(rng)])
+        assert index.last_refresh_repadded == 4
+
+    def test_packet_growth_repads_all(self):
+        index, rng = self.skewed_index()
+        # enough rows into one partition to outgrow the common packet count
+        index.add_rows([random_row(rng, nnz=8) for _ in range(60)])
+        assert index.last_refresh_repadded == 4
+
+    @pytest.mark.parametrize("layout", ["split", "fused"])
+    def test_incremental_snapshot_equals_full(self, layout):
+        results = []
+        for incremental in (True, False):
+            index, rng = self.skewed_index(incremental, layout)
+            index.add_rows([random_row(rng) for _ in range(3)])
+            index.replace_rows([5], [random_row(rng)])
+            index.delete_rows([7])
+            results.append(index.packed)
+        inc, full = results
+        np.testing.assert_array_equal(inc.vals, full.vals)
+        np.testing.assert_array_equal(inc.cols, full.cols)
+        np.testing.assert_array_equal(inc.flags, full.flags)
+        np.testing.assert_array_equal(inc.slot_to_row, full.slot_to_row)
+        if layout == "fused":
+            np.testing.assert_array_equal(inc.words, full.words)
+        else:
+            assert inc.words is None
+
+    def test_old_snapshot_not_aliased_by_refresh(self):
+        index, rng = self.skewed_index()
+        old = index.packed
+        before = old.vals.copy()
+        index.add_rows([random_row(rng)])
+        np.testing.assert_array_equal(old.vals, before)
+        assert not np.shares_memory(old.vals, index.packed.vals)
+
+
 class TestServiceLayer:
     def test_upsert_delete_stats(self):
         rng = np.random.default_rng(11)
@@ -216,6 +285,25 @@ class TestServiceLayer:
         assert int(rows[0]) == int(ids[0])
         _, rows = svc.query_batch(q[None, :])
         assert int(rows[0, 0]) == int(ids[0])
+
+    def test_upsert_rejects_width_mismatch(self):
+        rng = np.random.default_rng(14)
+        svc = core.SparseEmbeddingIndex.from_dense(
+            rng.standard_normal((50, N_COLS)).astype(np.float32), nnz_per_row=8,
+            config=TopKSpMVConfig(big_k=8, k=8, num_partitions=2, block_size=32),
+        )
+        with pytest.raises(ValueError, match="width"):
+            svc.upsert(rng.standard_normal((1, N_COLS + 16)).astype(np.float32))
+
+    def test_streaming_delete_counts_one_shot_iterable(self):
+        rng = np.random.default_rng(15)
+        svc = StreamingSimilarityService(core.SparseEmbeddingIndex.from_dense(
+            rng.standard_normal((60, N_COLS)).astype(np.float32), nnz_per_row=8,
+            config=TopKSpMVConfig(big_k=8, k=8, num_partitions=2, block_size=32),
+        ))
+        svc.delete(g for g in [1, 2, 3])  # generator: must not be re-consumed
+        assert svc.rows_deleted == 3
+        assert svc.stats().deleted_rows == 3
 
     def test_query_exact_casts_like_query(self):
         rng = np.random.default_rng(12)
