@@ -5,11 +5,13 @@ served stream grows with churn: live nnz migrates into step-padded delta
 segments and tombstoned slots keep streaming until compaction.  This bench
 replaces batches of rows to sweep the delta fraction, timing the batched
 kernel query at each point, then times ``compact()`` and verifies it restores
-base-only bytes/nnz.  It also measures the snapshot-refresh cost per upsert
-batch with incremental padded-stream caching (re-pad only the mutated
-partition) against the legacy full re-pad.  Results merge into
-``BENCH_topk_spmv.json`` under ``streaming_updates`` so the degradation
-curve is tracked across PRs.
+base-only bytes/nnz.  It also measures (a) the snapshot-refresh cost per
+upsert across the three stacking modes — ``cow`` (copy-on-write stacked
+buffers: only mutated partitions' rows written), ``stack`` (incremental
+re-pad but legacy O(bytes) ``np.stack``), ``full`` (re-pad everything) — and
+(b) ``compact()`` wall-clock with parallel vs serial partition re-encode.
+Results merge into ``BENCH_topk_spmv.json`` under ``streaming_updates`` so
+the degradation curve is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -87,35 +89,89 @@ def run(verbose: bool = True, n_rows: int = 4096, n_cols: int = 256,
               f"{post.bytes_per_nnz:.2f} (base {base_bytes_per_nnz:.2f})  "
               f"post-compact query {t_post*1e3:.2f} ms")
 
-    # --- snapshot-refresh cost: incremental (re-pad mutated partition only)
-    # vs legacy full re-pad, measured as mean single-row-upsert wall-clock
-    # (streaming ingest: one row -> exactly one mutated partition) ---
-    refresh = {}
+    # --- snapshot-refresh cost per single-row upsert (streaming ingest:
+    # one row -> one mutated partition), across the three stacking modes.
+    # Measured on a LARGER matrix than the query sweeps: the np.stack term
+    # COW eliminates is O(index bytes), so at toy scale it drowns in python
+    # overhead — the refresh matrix is sized so stream bytes dominate. ---
+    r_rows, r_cores, r_nnz = n_rows * 8, CORES * 2, mean_nnz * 2
+    rcsr = core.synthetic_embedding_csr(r_rows, n_cols, r_nnz, "gamma", 2)
+    refresh = {"matrix": {"n_rows": r_rows, "n_cols": n_cols, "nnz": rcsr.nnz,
+                          "cores": r_cores}}
     n_upserts = 16
-    for incremental in (True, False):
+    modes = {
+        "cow": dict(incremental_snapshots=True, cow_snapshots=True),
+        "stack": dict(incremental_snapshots=True, cow_snapshots=False),
+        "full": dict(incremental_snapshots=False, cow_snapshots=False),
+    }
+    for key, knobs in modes.items():
         mcfg = core.TopKSpMVConfig(
-            big_k=BIG_K, k=K, num_partitions=CORES, block_size=BLOCK,
-            packets_per_step=T_STEP, incremental_snapshots=incremental,
+            big_k=BIG_K, k=K, num_partitions=r_cores, block_size=BLOCK,
+            packets_per_step=T_STEP, **knobs,
         )
-        midx = core.SparseEmbeddingIndex(csr, mcfg, nnz_per_row=mean_nnz)
+        midx = core.SparseEmbeddingIndex(rcsr, mcfg, nnz_per_row=r_nnz)
         row = rng.standard_normal((1, n_cols)).astype(np.float32)
         midx.upsert(row)  # warm the padded-stream cache
-        repadded = 0
+        midx.upsert(row)  # and prime the COW buffer ping-pong
+        repadded = copied = 0
         t0 = time.perf_counter()
         for _ in range(n_upserts):
             midx.upsert(row)
             repadded += midx.index.last_refresh_repadded
+            copied += midx.index.last_refresh_copied
         dt = (time.perf_counter() - t0) / n_upserts
-        key = "incremental" if incremental else "full"
         refresh[f"{key}_upsert_ms"] = dt * 1e3
         refresh[f"{key}_repadded_partitions"] = repadded / n_upserts
-    refresh["speedup"] = refresh["full_upsert_ms"] / refresh["incremental_upsert_ms"]
+        refresh[f"{key}_copied_partitions"] = copied / n_upserts
+    refresh["stream_mb"] = midx.index.packed.stream_bytes / 1e6
+    refresh["cow_speedup_vs_stack"] = (
+        refresh["stack_upsert_ms"] / refresh["cow_upsert_ms"]
+    )
+    refresh["speedup"] = refresh["full_upsert_ms"] / refresh["cow_upsert_ms"]
     if verbose:
-        print(f"refresh: incremental {refresh['incremental_upsert_ms']:.2f} ms"
-              f"/upsert (re-pads {refresh['incremental_repadded_partitions']:.1f}"
-              f"/{CORES} partitions)  full {refresh['full_upsert_ms']:.2f} ms"
-              f"/upsert (re-pads {refresh['full_repadded_partitions']:.1f})  "
-              f"-> {refresh['speedup']:.2f}x")
+        for key in modes:
+            print(f"refresh: {key:5s} {refresh[f'{key}_upsert_ms']:.2f} ms"
+                  f"/upsert (re-pads {refresh[f'{key}_repadded_partitions']:.1f}"
+                  f"/{r_cores}, stack-copies "
+                  f"{refresh[f'{key}_copied_partitions']:.1f}/{r_cores})")
+        print(f"refresh ({refresh['stream_mb']:.1f} MB stream): "
+              f"cow vs stack {refresh['cow_speedup_vs_stack']:.2f}x, "
+              f"cow vs full {refresh['speedup']:.2f}x")
+
+    # --- compaction cost: parallel vs serial partition re-encode.  The
+    # thread pool pays off with many cores and big partitions (numpy
+    # releases the GIL on large arrays); ``parallel_compaction_min_nnz``
+    # keeps small indexes serial, so the parallel arm forces the threshold
+    # to 0 and the machine's core count is recorded for context. ---
+    import os
+
+    compaction = {"cpus": os.cpu_count()}
+    for key, knobs in (
+        ("parallel", dict(parallel_compaction=True,
+                          parallel_compaction_min_nnz=0)),
+        ("serial", dict(parallel_compaction=False)),
+    ):
+        ccfg = core.TopKSpMVConfig(
+            big_k=BIG_K, k=K, num_partitions=CORES, block_size=BLOCK,
+            packets_per_step=T_STEP, **knobs,
+        )
+        cidx = core.SparseEmbeddingIndex(csr, ccfg, nnz_per_row=mean_nnz)
+        ids = np.arange(n_rows // 2)
+        cidx.upsert(
+            rng.standard_normal((len(ids), n_cols)).astype(np.float32), ids=ids
+        )
+        cidx.compact()               # warm (first-touch, pool spin-up)
+        cidx.upsert(
+            rng.standard_normal((len(ids), n_cols)).astype(np.float32), ids=ids
+        )
+        t0 = time.perf_counter()
+        cidx.compact()
+        compaction[f"{key}_ms"] = (time.perf_counter() - t0) * 1e3
+    compaction["speedup"] = compaction["serial_ms"] / compaction["parallel_ms"]
+    if verbose:
+        print(f"compact: parallel {compaction['parallel_ms']:.1f} ms  "
+              f"serial {compaction['serial_ms']:.1f} ms  "
+              f"-> {compaction['speedup']:.2f}x on {compaction['cpus']} cpus")
 
     payload = {
         "backend": jax.default_backend(),
@@ -132,6 +188,7 @@ def run(verbose: bool = True, n_rows: int = 4096, n_cols: int = 256,
         "slowdown_delta50_vs_base": degradation,
         "stream_layout": index.stats().stream_layout,
         "snapshot_refresh": refresh,
+        "compaction": compaction,
     }
     merge_into_bench_json(payload, section="streaming_updates")
     if verbose:
@@ -142,7 +199,9 @@ def run(verbose: bool = True, n_rows: int = 4096, n_cols: int = 256,
         "us_per_call": results[0]["us_per_call"],
         "derived": (f"delta50_slowdown={degradation:.2f}x "
                     f"compact_ms={t_compact*1e3:.0f} "
-                    f"refresh_speedup={refresh['speedup']:.2f}x"),
+                    f"refresh_speedup={refresh['speedup']:.2f}x "
+                    f"cow_vs_stack={refresh['cow_speedup_vs_stack']:.2f}x "
+                    f"compact_par={compaction['speedup']:.2f}x"),
     }
 
 

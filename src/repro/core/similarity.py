@@ -6,7 +6,11 @@ partition -> BS-CSR encode -> quantize) and batched querying behind one class.
 
 The backing index is a ``MutableTopKSpMVIndex``: rows can be ``upsert``-ed
 and ``delete``-d while serving (delta tile-packets + tombstones, no
-re-encode), and ``compact()`` periodically reclaims the churn.
+re-encode), and ``compact()`` periodically reclaims the churn.  Queries
+dispatch through the device-resident snapshot plane (``kernels/executor``):
+each snapshot version's streams are pinned on device once, so steady-state
+queries perform zero host->device transfers (``dispatch_info()`` exposes the
+executor caches).
 """
 from __future__ import annotations
 
@@ -35,6 +39,8 @@ class SimilaritySearchStats:
     version: int = 0              # snapshot version counter
     stream_layout: str = "split"  # fused (one burst/step) | split (3 arrays)
     last_refresh_repadded: int = 0  # partitions re-padded by the last snapshot
+    last_refresh_copied: int = 0  # partitions copied into the COW stack buffers
+    snapshot_buffers: int = 0     # COW stacked buffers pooled (leased + free)
 
 
 class SparseEmbeddingIndex:
@@ -163,4 +169,10 @@ class SparseEmbeddingIndex:
             version=self.index.version,
             stream_layout=packed.stream_layout,
             last_refresh_repadded=self.index.last_refresh_repadded,
+            last_refresh_copied=self.index.last_refresh_copied,
+            snapshot_buffers=self.index.snapshot_buffers,
         )
+
+    def dispatch_info(self) -> dict:
+        """Cache stats of the device-resident executor serving this config."""
+        return topk_lib.query_executor(self.config).cache_info()

@@ -9,6 +9,8 @@ paper's "no output write-back" argument, restated as "no large collective".
 from __future__ import annotations
 
 import dataclasses
+import os
+from concurrent.futures import ThreadPoolExecutor
 from functools import partial
 from typing import Optional, Sequence, Tuple
 
@@ -21,6 +23,7 @@ from repro.core import bscsr as bscsr_lib
 from repro.core import partition as partition_lib
 from repro.core.precision_model import expected_precision, min_partitions_for_precision
 from repro.core.quantization import FORMATS
+from repro.kernels import executor as executor_lib
 from repro.kernels import ops as kernel_ops
 from repro.kernels import ref as ref_lib
 
@@ -50,6 +53,14 @@ class TopKSpMVConfig:
     inner_loop: str = "linear"     # linear | legacy (+ mixed, for parity tests)
     stream_layout: str = "fused"   # fused (one burst/step) | split (legacy 3-array)
     incremental_snapshots: bool = True  # mutable index: re-pad only mutated parts
+    use_executor: bool = True      # device-resident snapshot plane + compiled
+                                   # query fns (False: per-call upload dispatch)
+    cow_snapshots: bool = True     # mutable index: copy-on-write stacked buffers
+                                   # (False: legacy O(bytes) np.stack per refresh)
+    parallel_compaction: bool = True  # compact(): re-encode partitions in a pool
+    parallel_compaction_min_nnz: int = 100_000  # per-partition nnz below which
+                                   # compact() stays serial (pool dispatch and
+                                   # GIL-bound numpy beat tiny encodes)
     interpret: Optional[bool] = None  # None -> interpret unless on real TPU
 
     def resolve_partitions(self, n_rows: int) -> int:
@@ -128,11 +139,16 @@ class MutableTopKSpMVIndex:
     since the last snapshot — unmutated partitions reuse their cached padded
     arrays (``last_refresh_repadded`` counts re-padded partitions; a growth
     of the common step-aligned packet count forces an all-partition re-pad).
-    The final ``np.stack`` into fresh snapshot arrays is still one
-    O(index bytes) memcpy per refresh — required so frozen older snapshots
-    are never aliased; eliminating it via copy-on-write stacked buffers is
-    the ROADMAP follow-up.  ``incremental_snapshots=False`` restores the
-    legacy re-pad-everything behavior for comparison.
+    With ``config.cow_snapshots`` (the default) the final stacking is
+    copy-on-write too: snapshots lease read-only views of preallocated
+    stacked buffers (``kernel_ops.SnapshotBufferPool``) and only mutated
+    partitions' rows are rewritten, so a steady-state refresh is O(mutated
+    partitions) end to end (``last_refresh_copied`` counts buffer copies).
+    ``cow_snapshots=False`` restores the legacy O(index bytes) ``np.stack``
+    per refresh; ``incremental_snapshots=False`` additionally restores the
+    re-pad-everything behavior.  Frozen snapshots stay bit-identical either
+    way — a buffer is recycled only after every snapshot leasing it has been
+    garbage collected.
     """
 
     def __init__(self, csr: bscsr_lib.CSRMatrix, config: TopKSpMVConfig):
@@ -172,9 +188,14 @@ class MutableTopKSpMVIndex:
         self._version = -1
         self._packed: Optional[kernel_ops.PackedPartitions] = None
         self._live_csr_cache = None  # (version, (csr, gids))
+        self._buffer_pool = kernel_ops.SnapshotBufferPool()
+        self._stamp_counter = 0
         self._reset_padded_cache()
         self.last_refresh_repadded = 0   # partitions re-padded by the last refresh
         self.total_repadded = 0
+        self.last_refresh_copied = 0     # partitions copied into the COW stack
+        self.total_copied = 0
+        self.last_compact_parallel = False
         self._refresh()
 
     def _reset_padded_cache(self) -> None:
@@ -184,6 +205,15 @@ class MutableTopKSpMVIndex:
         self._padded_streams = [None] * c
         self._padded_words = [None] * c
         self._padded_max_p = -1
+        # All partitions' content is new: stamp them past every COW buffer.
+        self._stamp_counter += 1
+        self._part_stamps = np.full(c, self._stamp_counter, np.int64)
+
+    def _mark_dirty(self, ci: int) -> None:
+        """Record that partition ``ci``'s stream content changed."""
+        self._dirty.add(ci)
+        self._stamp_counter += 1
+        self._part_stamps[ci] = self._stamp_counter
 
     # -- snapshot bookkeeping ------------------------------------------------
 
@@ -194,8 +224,10 @@ class MutableTopKSpMVIndex:
         fused layout, their fused word forms) are cached, so only partitions
         whose stream mutated since the last snapshot pay a re-pad/re-fuse —
         unless the common step-aligned packet count changed, which re-pads
-        everyone.  The snapshot arrays themselves are freshly stacked every
-        time, so frozen older snapshots are never aliased by later updates.
+        everyone.  With ``cow_snapshots`` the stacked snapshot arrays are
+        copy-on-write buffer leases (only mutated partitions' rows written);
+        otherwise they are freshly ``np.stack``-ed every time.  Frozen older
+        snapshots are never aliased by later updates in either mode.
         """
         fused = self.config.stream_layout == "fused"
         mult = self.config.packets_per_step
@@ -224,13 +256,7 @@ class MutableTopKSpMVIndex:
                 slot_map[ci, : len(slots)] = np.asarray(slots, dtype=np.int32)
         self._deleted.grow(self._next_gid)
         tombs = self._deleted.bits[: max(self._next_gid, 1)].copy()
-        self._packed = kernel_ops.stack_padded_streams(
-            self._padded_streams,
-            self._plan,
-            self._n_cols,
-            self._live_nnz,
-            stream_layout=self.config.stream_layout,
-            words=self._padded_words if fused else None,
+        segment_fields = dict(
             slot_to_row=slot_map,
             num_slots=num_slots,
             n_rows_total=self._next_gid,
@@ -240,6 +266,41 @@ class MutableTopKSpMVIndex:
             dead_nnz=self._dead_nnz,
             tombstone_count=self._tombstone_slots,
         )
+        if self.config.cow_snapshots:
+            buf, copied = self._buffer_pool.lease(
+                self._padded_streams,
+                self._padded_words if fused else None,
+                self._part_stamps,
+                max_p,
+                packets_multiple=mult,
+            )
+            self._packed = kernel_ops.PackedPartitions(
+                vals=buf.view("vals"),
+                cols=buf.view("cols"),
+                flags=buf.view("flags"),
+                plan=self._plan,
+                n_cols=self._n_cols,
+                nnz=self._live_nnz,
+                block_size=self._padded_streams[0].block_size,
+                value_format=self._fmt,
+                stream_layout=self.config.stream_layout,
+                words=buf.view("words") if fused else None,
+                **segment_fields,
+            )
+            buf.attach(self._packed)
+        else:
+            copied = len(self._padded_streams)  # np.stack copies everything
+            self._packed = kernel_ops.stack_padded_streams(
+                self._padded_streams,
+                self._plan,
+                self._n_cols,
+                self._live_nnz,
+                stream_layout=self.config.stream_layout,
+                words=self._padded_words if fused else None,
+                **segment_fields,
+            )
+        self.last_refresh_copied = copied
+        self.total_copied += copied
         self._version += 1
 
     @property
@@ -267,6 +328,11 @@ class MutableTopKSpMVIndex:
     @property
     def deleted_rows(self) -> int:
         return self._deleted.count
+
+    @property
+    def snapshot_buffers(self) -> int:
+        """COW stacked buffers currently pooled (leased + free)."""
+        return len(self._buffer_pool)
 
     @property
     def expected_precision(self) -> float:
@@ -299,7 +365,7 @@ class MutableTopKSpMVIndex:
                 rows, self._n_cols, self.config.block_size, self._fmt
             )
             self._streams[ci] = bscsr_lib.append_packets(self._streams[ci], delta)
-            self._dirty.add(ci)
+            self._mark_dirty(ci)
             slots = self._slots[ci]
             # The previously-open sentinel becomes a dead candidate slot.
             slots.append(int(bscsr_lib.INVALID_ROW))
@@ -398,20 +464,40 @@ class MutableTopKSpMVIndex:
         return csr, gids
 
     def compact(self) -> None:
-        """Re-encode live rows into a fresh base segment, one partition at a time.
+        """Re-encode live rows into a fresh base segment, partitions in parallel.
 
         Reclaims delta packets, dead slots and tombstoned stream bytes,
-        restoring base-only bytes/nnz.  The previous snapshot keeps serving
-        until the final atomic swap; deleted ids stay masked afterwards via
-        the global tombstone bitmap.
+        restoring base-only bytes/nnz.  With ``config.parallel_compaction``
+        (the default) partitions are re-encoded concurrently in a thread
+        pool once per-partition work clears ``parallel_compaction_min_nnz``
+        — numpy releases the GIL on large-array ops, so wall-clock stops
+        scaling with index size once cores cover the partitions, while tiny
+        indexes (where pool dispatch would dominate) stay serial.  Either
+        way the previous snapshot keeps serving until the single atomic swap
+        under the existing version counter; deleted ids stay masked
+        afterwards via the global tombstone bitmap.
         """
         csr, gids = self.live_csr()
         c = max(1, self.config.resolve_partitions(max(csr.shape[0], 1)))
         plan = partition_lib.PartitionPlan.build(csr.shape[0], c)
         parts = partition_lib.partition_csr(csr, plan)
-        streams = []
-        for p in parts:  # partition-at-a-time; self._packed still serves meanwhile
-            streams.append(bscsr_lib.encode_bscsr(p, self.config.block_size, self._fmt))
+
+        def encode(p):
+            return bscsr_lib.encode_bscsr(p, self.config.block_size, self._fmt)
+
+        # self._packed still serves while partitions re-encode.
+        parallel = (
+            self.config.parallel_compaction
+            and len(parts) > 1
+            and csr.nnz / len(parts) >= self.config.parallel_compaction_min_nnz
+        )
+        if parallel:
+            workers = min(len(parts), os.cpu_count() or 1)
+            with ThreadPoolExecutor(max_workers=workers) as pool:
+                streams = list(pool.map(encode, parts))
+        else:
+            streams = [encode(p) for p in parts]
+        self.last_compact_parallel = parallel
         self._streams = streams
         self._base_packets = max(e.num_packets for e in streams)
         self._plan = plan
@@ -431,11 +517,37 @@ class MutableTopKSpMVIndex:
         self._refresh()
 
 
+def query_executor(config: TopKSpMVConfig) -> executor_lib.QueryExecutor:
+    """The process-wide device-resident executor serving this config.
+
+    Pins each snapshot's streams on device once (keyed by snapshot uid) and
+    caches end-to-end compiled query fns, so steady-state dispatch performs
+    zero host->device transfers — see ``kernels/executor.py``.
+    """
+    return executor_lib.get_executor(
+        big_k=config.big_k,
+        k=config.k,
+        packets_per_step=config.packets_per_step,
+        gather_mode=config.gather_mode,
+        inner_loop=config.inner_loop,
+        interpret=config.resolve_interpret(),
+    )
+
+
 def topk_spmv(
     index: TopKSpMVIndex, x: jnp.ndarray, use_kernel: bool = True
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Single-device approximate Top-K query."""
+    """Single-device approximate Top-K query.
+
+    With ``config.use_executor`` (default) both the kernel and the reference
+    path dispatch through the device-resident snapshot plane; the legacy
+    per-call upload dispatch stays available as the opt-out baseline.
+    """
     cfg = index.config
+    if cfg.use_executor:
+        return query_executor(cfg).query(
+            x, index.packed, path="kernel" if use_kernel else "reference"
+        )
     if use_kernel:
         return kernel_ops.topk_spmv_blocked(
             x,
@@ -459,8 +571,14 @@ def topk_spmv_batched(
     ``use_kernel`` the multi-query Pallas kernel amortizes every packet read
     across all Q queries (per-query bytes/nnz divided by Q — §Perf C);
     otherwise the vmapped jnp oracle evaluates the same approximation.
+    With ``config.use_executor`` (default) either path dispatches through the
+    device-resident snapshot plane with power-of-two Q bucketing.
     """
     cfg = index.config
+    if cfg.use_executor:
+        return query_executor(cfg).query_batched(
+            xs, index.packed, path="kernel" if use_kernel else "reference"
+        )
     if use_kernel:
         return kernel_ops.topk_spmv_batched(
             xs,
@@ -534,7 +652,7 @@ def distributed_topk_spmv_fn(
     if packed.slot_to_row is not None:
         slot_to_row = jax.device_put(jnp.asarray(packed.slot_to_row), core_sharded)
     tombstones = None
-    if packed.tombstones is not None and packed.tombstones.any():
+    if packed.has_tombstones:  # computed once at snapshot build
         tombstones = jax.device_put(jnp.asarray(packed.tombstones), replicated)
     max_rows = packed.max_slots
     interpret = cfg.resolve_interpret()

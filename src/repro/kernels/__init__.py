@@ -1,1 +1,12 @@
-"""Pallas TPU kernels for the paper's compute hot-spot: BS-CSR Top-K SpMV."""
+"""Pallas TPU kernels for the paper's compute hot-spot: BS-CSR Top-K SpMV.
+
+``ops`` packs/dispatches host snapshots; ``executor`` is the device-resident
+snapshot plane (pin streams once per snapshot uid, compiled end-to-end query
+functions, zero steady-state host->device transfers).
+"""
+from repro.kernels.executor import (  # noqa: F401
+    DeviceSnapshot,
+    QueryExecutor,
+    device_snapshot,
+    get_executor,
+)

@@ -31,12 +31,28 @@ fused changes the burst *shape*, not the byte count:
 
   bytes/nnz (B = 256, int16 idx):  F32 6.125 | BF16 4.125 | Q15 4.125
   | Q7 3.125 — vs 12 for naive COO; fused == split, in ONE burst per step.
+
+Host-snapshot vs device-snapshot lifecycle
+------------------------------------------
+
+``PackedPartitions`` is the HOST plane: numpy arrays (for a mutable index,
+read-only copy-on-write views leased from a ``SnapshotBufferPool``).  The
+dispatch helpers in this module (``topk_spmv_blocked`` / ``topk_spmv_batched``
+/ the reference oracles) upload those arrays per call — simple, correct, and
+the baseline the benchmarks compare against.  Production queries go through
+``kernels/executor.py`` instead: a ``DeviceSnapshot`` pins each host
+snapshot's kernel streams + finalize arrays on device exactly once (keyed by
+the snapshot ``uid`` assigned below, evicted when the host snapshot is
+collected), and a ``QueryExecutor`` fuses kernel + finalize into one cached
+jitted call — steady-state dispatch does zero host->device transfers.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import itertools
 import time
+import weakref
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -52,6 +68,11 @@ from repro.kernels.bscsr_topk_spmv import bscsr_topk_spmv, bscsr_topk_spmv_multi
 NEG_INF = ref_lib.NEG_INF
 INVALID_ROW = bscsr_lib.INVALID_ROW
 
+# Monotonic snapshot identities: the device-resident plane
+# (``kernels/executor.py``) pins each snapshot's arrays on device exactly
+# once, keyed by this uid, and evicts when the host snapshot is collected.
+_SNAPSHOT_UIDS = itertools.count()
+
 
 @dataclasses.dataclass(frozen=True)
 class PackedPartitions:
@@ -59,6 +80,10 @@ class PackedPartitions:
 
     Immutable snapshot: a mutable index swaps in a fresh instance per update
     batch, so queries holding an older snapshot keep answering consistently.
+
+    Each instance gets a fresh ``uid`` (including via ``dataclasses.replace``)
+    and a ``has_tombstones`` bit computed ONCE here — per-dispatch code must
+    never re-scan the tombstone bitmap.
     """
 
     vals: np.ndarray          # (C, P, B) base+delta concatenated streams
@@ -80,6 +105,19 @@ class PackedPartitions:
     delta_nnz: int = 0                         # live nnz held in delta segments
     dead_nnz: int = 0                          # stream nnz under retired slots
     tombstone_count: int = 0                   # retired (tombstoned) slots
+    # init=False: always derived in __post_init__, never copied stale through
+    # dataclasses.replace.
+    uid: int = dataclasses.field(init=False, compare=False, repr=False,
+                                 default=-1)
+    has_tombstones: bool = dataclasses.field(init=False, compare=False,
+                                             default=False)
+
+    def __post_init__(self):
+        object.__setattr__(self, "uid", next(_SNAPSHOT_UIDS))
+        object.__setattr__(
+            self, "has_tombstones",
+            self.tombstones is not None and bool(self.tombstones.any()),
+        )
 
     @property
     def num_cores(self) -> int:
@@ -217,6 +255,148 @@ def pack_partitions(
     )
 
 
+class _StackBuffer:
+    """One preallocated (C, capacity, ·) stacked stream buffer, leased out.
+
+    ``stamps`` records, per partition, the mutation stamp of the data the
+    buffer currently holds; ``sync`` copies in only partitions whose stamp
+    (or common padded packet count) went stale.  ``attach`` registers the
+    snapshot viewing the buffer — the buffer may be re-leased only once every
+    attached snapshot has been garbage collected, which is what keeps frozen
+    snapshots bit-identical while later refreshes write elsewhere.
+    """
+
+    def __init__(self, geometry: tuple, capacity: int):
+        c, block, vdtype, cdtype, flag_words, word_width = geometry
+        self.geometry = geometry
+        self.capacity = capacity      # packet capacity, including headroom
+        self.pad_to = -1              # packet count the contents pad to
+        self.stamps = np.full(c, -1, np.int64)
+        self.vals = np.zeros((c, capacity, block), vdtype)
+        self.cols = np.zeros((c, capacity, block), cdtype)
+        self.flags = np.zeros((c, capacity, flag_words), np.int32)
+        self.words = (
+            np.zeros((c, capacity, word_width), np.int32) if word_width else None
+        )
+        self._leases: list = []
+
+    def is_free(self) -> bool:
+        """True when no live snapshot views this buffer."""
+        self._leases = [r for r in self._leases if r() is not None]
+        return not self._leases
+
+    def attach(self, snapshot) -> None:
+        self._leases.append(weakref.ref(snapshot))
+
+    def sync(
+        self,
+        padded: Sequence[bscsr_lib.BSCSRMatrix],
+        words: Optional[Sequence[np.ndarray]],
+        stamps: np.ndarray,
+        pad_to: int,
+    ) -> int:
+        """Copy in stale partitions; returns how many were copied."""
+        stale_all = pad_to != self.pad_to
+        copied = 0
+        for ci, e in enumerate(padded):
+            if not stale_all and self.stamps[ci] == stamps[ci]:
+                continue
+            self.vals[ci, :pad_to] = e.vals
+            self.cols[ci, :pad_to] = e.cols
+            self.flags[ci, :pad_to] = e.flags
+            if self.words is not None:
+                self.words[ci, :pad_to] = words[ci]
+            copied += 1
+        self.stamps[:] = stamps
+        self.pad_to = pad_to
+        return copied
+
+    def view(self, name: str) -> np.ndarray:
+        """Read-only (C, pad_to, ·) view of one stream for a snapshot.
+
+        The strict slice (capacity > pad_to; see the lease() invariant) is
+        non-contiguous for C > 1, so any host->device upload of it must
+        copy.  A size-1 core dim keeps the slice contiguous — numpy ignores
+        unit dims in the contiguity check — and a contiguous buffer CAN be
+        zero-copy aliased by ``jnp.asarray`` on CPU, so that (degenerate,
+        single-partition) case hands out a copy instead.
+        """
+        assert self.capacity > self.pad_to
+        v = getattr(self, name)[:, : self.pad_to]
+        if v.flags.c_contiguous:
+            v = v.copy()
+        v.setflags(write=False)
+        return v
+
+
+class SnapshotBufferPool:
+    """Copy-on-write stacked snapshot buffers for a mutable index.
+
+    A mutable index refreshes by stacking its padded per-partition streams
+    into fresh (C, P, ·) arrays; that ``np.stack`` is O(index bytes) even
+    when a single row changed.  This pool keeps a few preallocated stacked
+    buffers with packet headroom: each refresh leases a buffer that no live
+    snapshot views (weakref-tracked), copies in ONLY the partitions whose
+    mutation stamp differs from what the buffer already holds, and hands the
+    snapshot read-only sliced views.  Steady-state serving ping-pongs between
+    two buffers, so refresh cost is O(mutated partitions), not O(index
+    bytes); holding many old snapshots alive just grows the pool.
+
+    Caveat: liveness is tracked on the ``PackedPartitions`` object — keep the
+    snapshot itself alive, not bare references to its arrays.
+    """
+
+    def __init__(self, headroom: float = 0.5, max_free: int = 2):
+        self.headroom = headroom
+        self.max_free = max_free
+        self._buffers: list = []
+
+    def __len__(self) -> int:
+        return len(self._buffers)
+
+    def lease(
+        self,
+        padded: Sequence[bscsr_lib.BSCSRMatrix],
+        words: Optional[Sequence[np.ndarray]],
+        stamps: np.ndarray,
+        pad_to: int,
+        packets_multiple: int = 2,
+    ) -> Tuple[_StackBuffer, int]:
+        """A free, synced buffer for these streams -> (buffer, copied count).
+
+        Free buffers with a stale geometry (or too little capacity) are
+        dropped; if every compatible buffer is still viewed by a live
+        snapshot a fresh one is allocated with ``headroom`` extra packets.
+        """
+        word_width = words[0].shape[1] if words is not None else 0
+        geometry = (
+            len(padded), padded[0].vals.shape[1], padded[0].vals.dtype,
+            padded[0].cols.dtype, padded[0].flags.shape[1], word_width,
+        )
+        # capacity must STRICTLY exceed pad_to (fresh allocations guarantee
+        # it): a full-capacity lease would hand out *contiguous* views, which
+        # jnp.asarray zero-copy aliases on CPU — a later re-lease would then
+        # mutate memory a live jax array (from a per-call-upload dispatch)
+        # still reads.  Non-contiguous views force every upload to copy.
+        buf, keep, free_kept = None, [], 0
+        for b in self._buffers:
+            if b.is_free():
+                if (b.geometry != geometry or b.capacity <= pad_to
+                        or free_kept >= self.max_free):
+                    continue              # unusable and unreferenced: drop
+                free_kept += 1
+                if buf is None:
+                    buf = b
+            keep.append(b)
+        if buf is None:
+            extra = -(-int(pad_to * self.headroom) // packets_multiple)
+            cap = pad_to + max(packets_multiple, extra * packets_multiple)
+            buf = _StackBuffer(geometry, cap)
+            keep.append(buf)
+        self._buffers = keep
+        return buf, buf.sync(padded, words, stamps, pad_to)
+
+
 def finalize_candidates(
     local_vals: jnp.ndarray,   # (C, k)
     local_rows: jnp.ndarray,   # (C, k) partition-local slot ids
@@ -283,42 +463,55 @@ def _finalize_kwargs(packed: PackedPartitions) -> dict:
     )
     if packed.slot_to_row is not None:
         kw["slot_to_row"] = jnp.asarray(packed.slot_to_row)
-    if packed.tombstones is not None and packed.tombstones.any():
+    if packed.has_tombstones:  # computed once at snapshot build, never re-scanned
         kw["tombstones"] = jnp.asarray(packed.tombstones)
     return kw
 
 
-@functools.lru_cache(maxsize=None)
 def default_gather_mode(backend: Optional[str] = None) -> str:
     """Pick the stage-1 x-gather flavor for this backend, measured not guessed.
 
-    One-shot microbenchmark (cached per process) of the two gather idioms at
-    a representative stage-1 shape: ``jnp.take`` (native gather ports) vs the
-    one-hot matmul (MXU gather).  TPUs with few gather ports tend to prefer
-    the matmul; CPU/GPU interpret runs prefer ``take``.
+    One-shot microbenchmark (cached per process *per backend*) of the two
+    gather idioms at a representative stage-1 shape: ``jnp.take`` (native
+    gather ports) vs the one-hot matmul (MXU gather).  TPUs with few gather
+    ports tend to prefer the matmul; CPU/GPU interpret runs prefer ``take``.
+
+    The cache key is honest: ``backend=None`` normalizes to the process
+    default backend BEFORE caching (so ``default_gather_mode()`` and
+    ``default_gather_mode(jax.default_backend())`` share one entry), and the
+    microbench actually runs on the named backend's first device via
+    ``jax.default_device``.  A backend not attached to this process raises
+    ``RuntimeError`` from ``jax.devices`` rather than silently measuring the
+    default backend under the wrong cache key.
     """
-    backend = backend or jax.default_backend()
+    return _measured_gather_mode(backend or jax.default_backend())
+
+
+@functools.lru_cache(maxsize=None)
+def _measured_gather_mode(backend: str) -> str:
+    device = jax.devices(backend)[0]  # raises RuntimeError if unavailable
     m, tb = 256, 512
     rng = np.random.default_rng(0)
-    x = jnp.asarray(rng.standard_normal(m), jnp.float32)
-    c = jnp.asarray(rng.integers(0, m, size=tb), jnp.int32)
-    ids = jnp.arange(m, dtype=jnp.int32)
-    take_fn = jax.jit(lambda x, c: jnp.take(x, c))
-    onehot_fn = jax.jit(
-        lambda x, c: jnp.dot(
-            (c[:, None] == ids[None, :]).astype(jnp.float32), x,
-            preferred_element_type=jnp.float32,
+    with jax.default_device(device):
+        x = jnp.asarray(rng.standard_normal(m), jnp.float32)
+        c = jnp.asarray(rng.integers(0, m, size=tb), jnp.int32)
+        ids = jnp.arange(m, dtype=jnp.int32)
+        take_fn = jax.jit(lambda x, c: jnp.take(x, c))
+        onehot_fn = jax.jit(
+            lambda x, c: jnp.dot(
+                (c[:, None] == ids[None, :]).astype(jnp.float32), x,
+                preferred_element_type=jnp.float32,
+            )
         )
-    )
 
-    def measure(fn) -> float:
-        fn(x, c).block_until_ready()          # compile outside the timed loop
-        t0 = time.perf_counter()
-        for _ in range(30):
-            fn(x, c).block_until_ready()
-        return time.perf_counter() - t0
+        def measure(fn) -> float:
+            fn(x, c).block_until_ready()      # compile outside the timed loop
+            t0 = time.perf_counter()
+            for _ in range(30):
+                fn(x, c).block_until_ready()
+            return time.perf_counter() - t0
 
-    return "take" if measure(take_fn) <= measure(onehot_fn) else "onehot"
+        return "take" if measure(take_fn) <= measure(onehot_fn) else "onehot"
 
 
 def resolve_gather_mode(gather_mode: str) -> str:
@@ -333,7 +526,7 @@ def resolve_gather_mode(gather_mode: str) -> str:
     try:
         return default_gather_mode()
     except AttributeError:  # called under tracing: no concrete timing possible
-        default_gather_mode.cache_clear()
+        _measured_gather_mode.cache_clear()
         return "take"
 
 

@@ -2,10 +2,15 @@
 
 Queries and live updates interleave against the same ``SparseEmbeddingIndex``:
 updates land as delta tile-packets (no re-encode of the served stream), each
-update batch swaps in a fresh immutable snapshot, and a background-style
-compaction policy re-encodes the live rows whenever churn has inflated the
-stream past the configured thresholds.  This is the ROADMAP "streaming index
-updates" item: the paper's static benchmark index, made a living service.
+update batch swaps in a fresh immutable snapshot (copy-on-write stacked
+buffers: only mutated partitions are rewritten), and a background-style
+compaction policy re-encodes the live rows — partitions in parallel —
+whenever churn has inflated the stream past the configured thresholds.
+Queries dispatch through the device-resident executor: each snapshot
+version's streams are pinned on device once, and a version bump (update or
+compaction) invalidates exactly that pin.  This is the ROADMAP "streaming
+index updates" item: the paper's static benchmark index, made a living
+service.
 """
 from __future__ import annotations
 
@@ -84,3 +89,7 @@ class StreamingSimilarityService:
 
     def stats(self) -> SimilaritySearchStats:
         return self.index.stats()
+
+    def dispatch_info(self) -> dict:
+        """Executor cache stats: pinned snapshots, compiled fns, dispatches."""
+        return self.index.dispatch_info()

@@ -10,6 +10,11 @@ logits vector written), plus the sparsification approximation on top.
 Accuracy has two error sources, both measurable against the exact dense head:
 (1) partition approximation (Eq. 1 — exact model available), and
 (2) row sparsification (embedding-dependent; report overlap@K empirically).
+
+Dispatch goes through the device-resident executor: the sparsified embedding
+stream is pinned on device once at head construction's first query and every
+decode step reuses it — no per-token host->device re-upload of the
+vocabulary stream (``dispatch_info()`` exposes the executor caches).
 """
 from __future__ import annotations
 
@@ -58,6 +63,12 @@ class ApproxTopKHead:
                 stream_layout=self.cfg.stream_layout,
             ),
         )
+
+    def dispatch_info(self) -> dict:
+        """Cache stats of the device-resident executor serving this head."""
+        from repro.core.topk_spmv import query_executor
+
+        return query_executor(self.index.config).cache_info()
 
     @property
     def partition_precision(self) -> float:

@@ -1,0 +1,244 @@
+"""Device-resident snapshot plane: parity, pinning, invalidation, zero copies.
+
+The executor must be a pure dispatch optimization: every answer bit-identical
+to the per-call-upload helpers in ``kernels/ops.py`` across inner loops,
+stream layouts and value formats (including Q-bucket padding).  Device pins
+must follow snapshot identity — version bumps and ``compact()`` invalidate,
+garbage collection evicts — and the steady-state dispatch must perform ZERO
+host->device transfers (asserted under ``jax.transfer_guard``).
+"""
+import gc
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bscsr
+from repro.core.topk_spmv import (
+    MutableTopKSpMVIndex,
+    TopKSpMVConfig,
+    query_executor,
+    topk_spmv,
+    topk_spmv_batched,
+)
+from repro.kernels import executor as executor_lib
+from repro.kernels import ops
+from repro.kernels.bscsr_topk_spmv import INNER_LOOPS
+
+FORMATS = ["F32", "BF16", "Q15", "Q7"]
+LAYOUTS = ["split", "fused"]
+BIG_K = 10
+
+
+def make_problem(n_rows=150, n_cols=64, mean_nnz=8, seed=0):
+    csr = bscsr.synthetic_embedding_csr(n_rows, n_cols, mean_nnz, "gamma", seed)
+    x = np.random.default_rng(seed + 1).standard_normal(n_cols).astype(np.float32)
+    return csr, x
+
+
+def assert_bit_identical(a, b):
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+class TestExecutorParity:
+    """Executor answers == per-call-upload dispatch, bit for bit."""
+
+    @pytest.mark.parametrize("fmt", FORMATS)
+    @pytest.mark.parametrize("layout", LAYOUTS)
+    def test_single_query_all_inner_loops(self, fmt, layout):
+        csr, x = make_problem(seed=2)
+        packed = ops.pack_partitions(csr, 2, 32, fmt, stream_layout=layout)
+        xd = jnp.asarray(x)
+        for loop in INNER_LOOPS:
+            ex = executor_lib.QueryExecutor(big_k=BIG_K, k=8, inner_loop=loop)
+            got = ex.query(xd, packed)
+            want = ops.topk_spmv_blocked(xd, packed, BIG_K, k=8, inner_loop=loop)
+            assert_bit_identical(got, want)
+
+    @pytest.mark.parametrize("fmt", FORMATS)
+    @pytest.mark.parametrize("layout", LAYOUTS)
+    def test_batched_query_with_bucket_padding(self, fmt, layout):
+        csr, _ = make_problem(seed=3)
+        packed = ops.pack_partitions(csr, 2, 32, fmt, stream_layout=layout)
+        xs = np.random.default_rng(4).standard_normal((5, 64)).astype(np.float32)
+        ex = executor_lib.QueryExecutor(big_k=BIG_K, k=8)
+        got = ex.query_batched(jnp.asarray(xs), packed)  # Q=5 pads to bucket 8
+        assert got[0].shape == (5, BIG_K)
+        want = ops.topk_spmv_batched(jnp.asarray(xs), packed, BIG_K, k=8)
+        assert_bit_identical(got, want)
+
+    @pytest.mark.parametrize("loop", INNER_LOOPS)
+    def test_batched_inner_loops(self, loop):
+        csr, _ = make_problem(seed=5)
+        packed = ops.pack_partitions(csr, 2, 32, "F32", stream_layout="fused")
+        xs = np.random.default_rng(6).standard_normal((4, 64)).astype(np.float32)
+        ex = executor_lib.QueryExecutor(big_k=BIG_K, k=8, inner_loop=loop)
+        got = ex.query_batched(jnp.asarray(xs), packed)
+        want = ops.topk_spmv_batched(
+            jnp.asarray(xs), packed, BIG_K, k=8, inner_loop=loop
+        )
+        assert_bit_identical(got, want)
+
+    def test_reference_path(self):
+        csr, x = make_problem(seed=7)
+        packed = ops.pack_partitions(csr, 2, 32, "F32", stream_layout="fused")
+        ex = executor_lib.QueryExecutor(big_k=BIG_K, k=8)
+        got = ex.query(jnp.asarray(x), packed, path="reference")
+        want = ops.topk_spmv_reference(jnp.asarray(x), packed, BIG_K, k=8)
+        assert_bit_identical(got, want)
+        xs = np.random.default_rng(8).standard_normal((3, 64)).astype(np.float32)
+        got = ex.query_batched(jnp.asarray(xs), packed, path="reference")
+        want = ops.topk_spmv_reference_batched(jnp.asarray(xs), packed, BIG_K, k=8)
+        assert_bit_identical(got, want)
+
+    def test_segmented_snapshot_parity(self):
+        """Delta segments + tombstones flow through the executor unchanged."""
+        csr, x = make_problem(seed=9)
+        cfg = TopKSpMVConfig(big_k=BIG_K, k=16, num_partitions=2, block_size=32)
+        index = MutableTopKSpMVIndex(csr, cfg)
+        rng = np.random.default_rng(10)
+        index.add_rows([(np.arange(6, dtype=np.int32),
+                         rng.standard_normal(6).astype(np.float32))])
+        index.delete_rows([3, 7])
+        assert index.packed.has_tombstones
+        xd = jnp.asarray(x)
+        got = query_executor(cfg).query(xd, index.packed)
+        want = ops.topk_spmv_blocked(
+            xd, index.packed, BIG_K, k=16,
+            gather_mode=ops.resolve_gather_mode("auto"),
+        )
+        assert_bit_identical(got, want)
+
+
+class TestDevicePinning:
+    def test_snapshot_pinned_once_and_fns_cached(self):
+        csr, x = make_problem(seed=11)
+        packed = ops.pack_partitions(csr, 2, 32, "F32", stream_layout="fused")
+        ex = executor_lib.QueryExecutor(big_k=BIG_K, k=8)
+        xd = jnp.asarray(x)
+        a = ex.query(xd, packed)
+        builds = ex.fn_builds
+        b = ex.query(xd, packed)
+        assert ex.fn_builds == builds  # cache hit: no rebuild
+        assert ex.dispatches == 2
+        assert_bit_identical(a, b)
+        # one device pin for this uid; repeated lookups return the same object
+        snap1 = executor_lib.device_snapshot(packed)
+        snap2 = executor_lib.device_snapshot(packed)
+        assert snap1 is snap2
+
+    def test_gc_evicts_device_pin(self):
+        csr, x = make_problem(seed=12)
+        packed = ops.pack_partitions(csr, 2, 32, "F32", stream_layout="fused")
+        ex = executor_lib.QueryExecutor(big_k=BIG_K, k=8)
+        ex.query(jnp.asarray(x), packed)
+        key = (packed.uid, "fused")
+        assert key in executor_lib._DEVICE_CACHE
+        del packed
+        gc.collect()
+        assert key not in executor_lib._DEVICE_CACHE
+
+    def test_stale_fns_evicted_under_churn(self):
+        """Every refresh changes the shape signature; dead signatures' fns
+        must be evicted or a long-lived service leaks compiled executables."""
+        csr, x = make_problem(seed=18)
+        cfg = TopKSpMVConfig(big_k=BIG_K, k=16, num_partitions=2, block_size=32)
+        index = MutableTopKSpMVIndex(csr, cfg)
+        ex = executor_lib.QueryExecutor(big_k=BIG_K, k=16)
+        xd = jnp.asarray(x)
+        rng = np.random.default_rng(19)
+        for _ in range(4):
+            ex.query(xd, index.packed)
+            index.add_rows([(np.arange(5, dtype=np.int32),
+                             rng.standard_normal(5).astype(np.float32))])
+            gc.collect()
+        assert ex.fn_builds >= 4          # churn really did retrace
+        assert len(ex._fns) <= 2          # but only live signatures survive
+
+    def test_version_bump_invalidates(self):
+        """A mutable-index refresh pins the NEW snapshot; answers track it."""
+        csr, x = make_problem(seed=13)
+        cfg = TopKSpMVConfig(big_k=BIG_K, k=16, num_partitions=2, block_size=32)
+        index = MutableTopKSpMVIndex(csr, cfg)
+        xd = jnp.asarray(x)
+        topk_spmv(index, xd)
+        uid0 = index.packed.uid
+        # upsert a row that must become the top hit for query x
+        gid = index.add_rows([self._aligned_row(x)])[0]
+        assert index.packed.uid != uid0
+        _, rows = topk_spmv(index, xd)
+        assert int(np.asarray(rows)[0]) == gid
+        want = ops.topk_spmv_blocked(
+            xd, index.packed, BIG_K, k=16,
+            gather_mode=ops.resolve_gather_mode("auto"),
+        )
+        assert_bit_identical(topk_spmv(index, xd), want)
+
+    def test_compact_invalidates(self):
+        csr, x = make_problem(seed=14)
+        cfg = TopKSpMVConfig(big_k=BIG_K, k=16, num_partitions=2, block_size=32)
+        index = MutableTopKSpMVIndex(csr, cfg)
+        xd = jnp.asarray(x)
+        gid = index.add_rows([self._aligned_row(x)])[0]
+        index.delete_rows([1])
+        topk_spmv(index, xd)
+        index.compact()
+        _, rows = topk_spmv(index, xd)
+        assert int(np.asarray(rows)[0]) == gid
+        assert 1 not in set(np.asarray(rows).tolist())
+        want = ops.topk_spmv_blocked(
+            xd, index.packed, BIG_K, k=16,
+            gather_mode=ops.resolve_gather_mode("auto"),
+        )
+        assert_bit_identical(topk_spmv(index, xd), want)
+
+    @staticmethod
+    def _aligned_row(x, nnz=8):
+        cols = np.argsort(-np.abs(x))[:nnz].astype(np.int32)
+        cols.sort()
+        return cols, (10.0 * np.sign(x[cols]) * np.ones(nnz)).astype(np.float32)
+
+
+class TestZeroTransfer:
+    """Steady-state dispatch must move NOTHING host->device."""
+
+    def test_steady_state_zero_transfers(self):
+        csr, x = make_problem(seed=15)
+        cfg = TopKSpMVConfig(big_k=BIG_K, k=16, num_partitions=2, block_size=32)
+        index = MutableTopKSpMVIndex(csr, cfg)
+        xd = jnp.asarray(x)
+        xs = jnp.asarray(
+            np.random.default_rng(16).standard_normal((3, 64)).astype(np.float32)
+        )
+        # warm: pins the snapshot, compiles the fns (incl. the Q=3->4 padder)
+        warm = [
+            topk_spmv(index, xd),
+            topk_spmv(index, xd, use_kernel=False),
+            topk_spmv_batched(index, xs),
+            topk_spmv_batched(index, xs, use_kernel=False),
+        ]
+        with jax.transfer_guard_host_to_device("disallow"):
+            cold = [
+                topk_spmv(index, xd),
+                topk_spmv(index, xd, use_kernel=False),
+                topk_spmv_batched(index, xs),
+                topk_spmv_batched(index, xs, use_kernel=False),
+            ]
+            for (_, r) in cold:
+                r.block_until_ready()
+        for a, b in zip(warm, cold):
+            assert_bit_identical(a, b)
+
+    def test_legacy_dispatch_does_transfer(self):
+        """The baseline per-call upload path trips the guard — the contrast
+        that proves the executor actually removed the transfers."""
+        csr, x = make_problem(seed=17)
+        packed = ops.pack_partitions(csr, 2, 32, "F32", stream_layout="fused")
+        xd = jnp.asarray(x)
+        ops.topk_spmv_blocked(xd, packed, BIG_K, k=8)  # warm compile caches
+        with pytest.raises(Exception):
+            with jax.transfer_guard_host_to_device("disallow"):
+                ops.topk_spmv_blocked(xd, packed, BIG_K, k=8)[0].block_until_ready()

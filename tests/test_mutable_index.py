@@ -192,7 +192,7 @@ class TestIncrementalSnapshots:
     """_refresh re-pads only mutated partitions (ISSUE: snapshot-refresh cost)."""
 
     @staticmethod
-    def skewed_index(incremental=True, layout="fused"):
+    def skewed_index(incremental=True, layout="fused", **cfg_kwargs):
         """4 partitions, partition 3 heavy: small deltas never grow max_p."""
         rng = np.random.default_rng(20)
         lens = np.full(64, 4, np.int64)
@@ -205,7 +205,7 @@ class TestIncrementalSnapshots:
         csr = bscsr.CSRMatrix(indptr, idx, data, (64, N_COLS))
         cfg = TopKSpMVConfig(big_k=8, k=8, num_partitions=4, block_size=32,
                              stream_layout=layout,
-                             incremental_snapshots=incremental)
+                             incremental_snapshots=incremental, **cfg_kwargs)
         return MutableTopKSpMVIndex(csr, cfg), rng
 
     def test_single_partition_mutation_repads_one(self):
@@ -255,6 +255,144 @@ class TestIncrementalSnapshots:
         index.add_rows([random_row(rng)])
         np.testing.assert_array_equal(old.vals, before)
         assert not np.shares_memory(old.vals, index.packed.vals)
+
+
+class TestCOWSnapshots:
+    """Copy-on-write stacked buffers: O(mutated partitions) refresh, no alias."""
+
+    @staticmethod
+    def skewed_index(**cfg_kwargs):
+        return TestIncrementalSnapshots.skewed_index(**cfg_kwargs)
+
+    def test_steady_state_copies_only_mutated_partitions(self):
+        import gc
+
+        index, rng = self.skewed_index()
+        assert index.last_refresh_copied == 4  # initial build fills a buffer
+        for _ in range(4):  # steady state: no external snapshot refs held
+            index.add_rows([random_row(rng)])
+            gc.collect()
+        # ping-pong between two buffers: each refresh rewrites at most the
+        # partitions mutated since THAT buffer was last synced (<= 2 here)
+        assert index.last_refresh_copied <= 2
+        assert index.snapshot_buffers <= 2
+
+    def test_deletes_copy_nothing_in_steady_state(self):
+        index, rng = self.skewed_index()
+        index.add_rows([random_row(rng)])
+        index.delete_rows([0])   # slot-map only; other buffer one stamp behind
+        index.delete_rows([1])   # now both buffers hold current stream content
+        assert index.last_refresh_copied == 0
+
+    def test_frozen_snapshots_bit_identical_across_reuse(self):
+        index, rng = self.skewed_index()
+        held = []
+        for _ in range(3):  # hold every snapshot: the pool must grow, not alias
+            index.add_rows([random_row(rng)])
+            packed = index.packed
+            held.append((packed, packed.vals.copy(), packed.words.copy()))
+        index.replace_rows([2], [random_row(rng)])
+        index.delete_rows([4])
+        for packed, vals, words in held:
+            np.testing.assert_array_equal(packed.vals, vals)
+            np.testing.assert_array_equal(packed.words, words)
+        assert index.snapshot_buffers >= 3
+
+    def test_snapshot_views_are_read_only(self):
+        index, _ = self.skewed_index()
+        with pytest.raises(ValueError):
+            index.packed.vals[0, 0, 0] = 1.0
+
+    def test_single_partition_views_never_alias_pool(self):
+        """C=1 slices stay C-contiguous (numpy ignores unit dims), which
+        jnp.asarray can zero-copy alias on CPU — view() must copy there so a
+        later buffer re-lease can't mutate a live device array."""
+        rng = np.random.default_rng(21)
+        csr = bscsr.synthetic_embedding_csr(48, N_COLS, 6, "gamma", 9)
+        cfg = TopKSpMVConfig(big_k=8, k=8, num_partitions=1, block_size=32)
+        index = MutableTopKSpMVIndex(csr, cfg)
+        index.add_rows([random_row(rng)])
+        for buf in index._buffer_pool._buffers:
+            assert not np.shares_memory(index.packed.vals, buf.vals)
+            assert not np.shares_memory(index.packed.words, buf.words)
+
+    def test_multi_partition_views_are_strict_noncontiguous_slices(self):
+        """C>1 leases must slice strictly below capacity: non-contiguous
+        views force every host->device upload to copy."""
+        index, rng = self.skewed_index()
+        index.add_rows([random_row(rng)])
+        packed = index.packed
+        assert not packed.vals.flags.c_contiguous
+        assert not packed.words.flags.c_contiguous
+
+    @pytest.mark.parametrize("layout", ["split", "fused"])
+    def test_cow_equals_legacy_stack(self, layout):
+        results = []
+        for cow in (True, False):
+            index, rng = self.skewed_index(layout=layout, cow_snapshots=cow)
+            index.add_rows([random_row(rng) for _ in range(3)])
+            index.replace_rows([5], [random_row(rng)])
+            index.delete_rows([7])
+            results.append(index.packed)
+        cow_p, stack_p = results
+        np.testing.assert_array_equal(cow_p.vals, stack_p.vals)
+        np.testing.assert_array_equal(cow_p.cols, stack_p.cols)
+        np.testing.assert_array_equal(cow_p.flags, stack_p.flags)
+        np.testing.assert_array_equal(cow_p.slot_to_row, stack_p.slot_to_row)
+        if layout == "fused":
+            np.testing.assert_array_equal(cow_p.words, stack_p.words)
+
+    def test_packet_growth_reallocates_consistently(self):
+        index, rng = self.skewed_index()
+        old = index.packed
+        before = old.words.copy()
+        # outgrow the common packet count AND the buffer headroom
+        index.add_rows([random_row(rng, nnz=8) for _ in range(120)])
+        assert index.packed.words.shape[1] > old.words.shape[1]
+        np.testing.assert_array_equal(old.words, before)
+        # the regrown snapshot still answers exactly (k headroom holds)
+        x = np.random.default_rng(30).standard_normal(N_COLS).astype(np.float32)
+        av, ar = topk_spmv(index, jnp.asarray(x), use_kernel=False)
+        ev, er = exact_live_topk(index, x, index.config.big_k)
+        np.testing.assert_allclose(np.asarray(av), ev, rtol=1e-4, atol=1e-5)
+
+
+class TestParallelCompaction:
+    def test_parallel_equals_serial(self):
+        results = []
+        for parallel in (True, False):
+            index, rng = TestIncrementalSnapshots.skewed_index(
+                parallel_compaction=parallel,
+                parallel_compaction_min_nnz=0,  # force threads on a tiny index
+            )
+            index.add_rows([random_row(rng) for _ in range(5)])
+            index.replace_rows([3], [random_row(rng)])
+            index.delete_rows([9])
+            index.compact()
+            results.append(index)
+        par, ser = results
+        assert par.last_compact_parallel and not ser.last_compact_parallel
+        assert par.version == ser.version
+        np.testing.assert_array_equal(par.packed.vals, ser.packed.vals)
+        np.testing.assert_array_equal(par.packed.cols, ser.packed.cols)
+        np.testing.assert_array_equal(par.packed.flags, ser.packed.flags)
+        np.testing.assert_array_equal(
+            par.packed.slot_to_row, ser.packed.slot_to_row
+        )
+
+    def test_compact_reclaims_and_serves(self):
+        index, rng = TestIncrementalSnapshots.skewed_index(
+            parallel_compaction=True
+        )
+        index.add_rows([random_row(rng) for _ in range(6)])
+        index.delete_rows([0, 1])
+        index.compact()
+        assert index.packed.delta_nnz == 0 and index.packed.tombstone_count == 0
+        x = rng.standard_normal(N_COLS).astype(np.float32)
+        av, ar = topk_spmv(index, jnp.asarray(x), use_kernel=True)
+        ev, er = exact_live_topk(index, x, index.config.big_k)
+        np.testing.assert_allclose(np.asarray(av), ev, rtol=1e-4, atol=1e-5)
+        assert not {0, 1} & set(np.asarray(ar).tolist())
 
 
 class TestServiceLayer:
