@@ -83,6 +83,9 @@ without re-encoding anything that was already written:
 Periodic compaction (``MutableTopKSpMVIndex.compact``) re-encodes the live
 rows into a fresh base segment, reclaiming dead slots and delta padding and
 restoring base-only bytes/nnz.
+
+docs/ARCHITECTURE.md walks this layout through the full query data path
+(encode -> fused stream -> kernel stages -> finalize -> executor dispatch).
 """
 from __future__ import annotations
 

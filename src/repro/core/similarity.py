@@ -174,5 +174,16 @@ class SparseEmbeddingIndex:
         )
 
     def dispatch_info(self) -> dict:
-        """Cache stats of the device-resident executor serving this config."""
-        return topk_lib.query_executor(self.config).cache_info()
+        """Cache + signature stats of the executor serving this config.
+
+        Executor counters (``compiled_fns``, ``fn_builds``, ``retraces``,
+        ``dispatches``, device-pin counts) merged with the current
+        snapshot's ``signature_info()`` — the bucketed dims that key
+        compiled query fns vs the live counts inside them.  Steady-state
+        serve-while-ingest shows ``retraces`` flat while versions climb;
+        see docs/SERVING.md for the field-by-field reference.
+        """
+        info = topk_lib.query_executor(self.config).cache_info()
+        info["signature"] = self.index.packed.signature_info()
+        info["churn_stable"] = self.config.churn_stable
+        return info

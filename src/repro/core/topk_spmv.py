@@ -61,6 +61,13 @@ class TopKSpMVConfig:
     parallel_compaction_min_nnz: int = 100_000  # per-partition nnz below which
                                    # compact() stays serial (pool dispatch and
                                    # GIL-bound numpy beat tiny encodes)
+    churn_stable: bool = True      # mutable index: pad the churn-varying
+                                   # snapshot dims (tombstone length, slot-map
+                                   # width, packet count) to power-of-two
+                                   # buckets so serve-while-ingest reuses ONE
+                                   # compiled signature per bucket — zero
+                                   # retraces between bucket doublings.
+                                   # False: exact dims (retrace per refresh).
     interpret: Optional[bool] = None  # None -> interpret unless on real TPU
 
     def resolve_partitions(self, n_rows: int) -> int:
@@ -205,6 +212,9 @@ class MutableTopKSpMVIndex:
         self._padded_streams = [None] * c
         self._padded_words = [None] * c
         self._padded_max_p = -1
+        # Churn-stable packet cap: re-anchored at the exact (step-aligned)
+        # count on build/compact, bumped to pow2 buckets by growth.
+        self._packet_cap = -1
         # All partitions' content is new: stamp them past every COW buffer.
         self._stamp_counter += 1
         self._part_stamps = np.full(c, self._stamp_counter, np.int64)
@@ -228,11 +238,40 @@ class MutableTopKSpMVIndex:
         copy-on-write buffer leases (only mutated partitions' rows written);
         otherwise they are freshly ``np.stack``-ed every time.  Frozen older
         snapshots are never aliased by later updates in either mode.
+
+        With ``config.churn_stable`` (the default) every churn-varying dim
+        of the snapshot — padded packet count, slot-map width, tombstone
+        bitmap length — is padded to a power-of-two bucket, so consecutive
+        refreshes produce shape-identical snapshots and the executor's
+        compiled query fns are reused with ZERO retraces until a bucket
+        doubles (docs/ARCHITECTURE.md, "where does a query retrace?").
         """
         fused = self.config.stream_layout == "fused"
         mult = self.config.packets_per_step
         max_p = max(e.num_packets for e in self._streams)
         max_p = max(-(-max_p // mult) * mult, mult)
+        if self.config.churn_stable:
+            # Churn-anchored packet cap: at build/compact the cap is the
+            # exact step-aligned count (ZERO padding overhead for a static
+            # index — streamed bytes are the paper's whole metric); the
+            # FIRST mutation refresh jumps it to the power-of-two bucket,
+            # and from then on delta appends change the padded stream SHAPE
+            # — i.e. the compiled query signature, and the all-partition
+            # re-pad a pad-to change forces — only when a bucket doubles.
+            # The cold jump lands deterministically on the first mutation
+            # (not on whichever upsert happens to outgrow a partition), so
+            # steady-state ingest after it retraces zero times per bucket.
+            # The padded tail is flag-free zero packets, which the kernels
+            # stream as a continuation of the open sentinel row
+            # (answer-preserving; <= 2x stream bytes worst case, reclaimed
+            # by the next compact()).
+            if self._packet_cap < 0:
+                self._packet_cap = max_p          # anchor refresh: exact
+            else:                                 # mutation refresh: bucket
+                self._packet_cap = max(
+                    self._packet_cap, kernel_ops.bucket_packets(max_p, mult)
+                )
+            max_p = self._packet_cap
         if not self.config.incremental_snapshots or max_p != self._padded_max_p:
             dirty = set(range(len(self._streams)))
         else:
@@ -248,6 +287,18 @@ class MutableTopKSpMVIndex:
 
         num_slots = np.array([len(s) for s in self._slots], dtype=np.int32)
         width = max(int(num_slots.max()) if num_slots.size else 0, 1)
+        tomb_len = max(self._next_gid, 1)
+        if self.config.churn_stable:
+            # Slot-map width (= the kernel's per-core slot budget) and the
+            # tombstone bitmap length grow with the id space; pad both to
+            # power-of-two buckets so a refresh reuses the compiled query
+            # signature.  Padded slot entries are INVALID_ROW and padded
+            # tombstone bits are False — ``finalize_candidates`` masks the
+            # former and never reads the latter (global row ids are always
+            # < n_rows_total), so the padding is answer-preserving; the
+            # phantom-slot hazard analysis lives in ``bscsr_topk_spmv.py``.
+            width = kernel_ops.pow2_bucket(width)
+            tomb_len = kernel_ops.pow2_bucket(tomb_len)
         slot_map = np.full(
             (len(self._slots), width), bscsr_lib.INVALID_ROW, dtype=np.int32
         )
@@ -255,7 +306,8 @@ class MutableTopKSpMVIndex:
             if slots:
                 slot_map[ci, : len(slots)] = np.asarray(slots, dtype=np.int32)
         self._deleted.grow(self._next_gid)
-        tombs = self._deleted.bits[: max(self._next_gid, 1)].copy()
+        tombs = np.zeros(tomb_len, dtype=bool)
+        tombs[: self._next_gid] = self._deleted.bits[: self._next_gid]
         segment_fields = dict(
             slot_to_row=slot_map,
             num_slots=num_slots,

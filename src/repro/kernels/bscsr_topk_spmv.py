@@ -56,6 +56,41 @@ Stage-1 gather hardening: padded/sentinel stream entries carry whatever col
 id the encoder (or a corrupted segment) left behind, so the x-gather uses
 explicit clip+mask semantics — out-of-range ids read x[clip] and are zeroed —
 instead of relying on backend-specific out-of-bounds behavior.
+
+Scratch-shape analysis for padded (bucketed) slot counts
+--------------------------------------------------------
+
+A churn-stable mutable index (``TopKSpMVConfig.churn_stable``) pads the
+per-core slot budget — the ``n_rows`` static arg below — and the padded
+packet count to power-of-two buckets so serve-while-ingest reuses one
+compiled signature.  Padding a *slot count* is hazardous in general: a slot
+that exists only as padding has no non-zeros, so any naive materialization
+scores it 0.0, and a zero-score phantom admitted to the k-sized stage-4
+scratchpad displaces a real candidate whenever the true top-k scores are
+negative — silently changing answers in a way no positive-score test
+catches.  The padding is safe here because phantom slots are only ever
+materialized at NEG_INF:
+
+  * in-kernel, candidate slots exist ONLY where the stream carries row-start
+    flags (stage 2/3 derive them from ``cumsum(flags)``), and flag-free
+    padding packets merely extend the open trailing sentinel row, which
+    stage 3 never completes — so bucketing ``n_rows`` or the packet count
+    adds NO candidates.  The only scratchpad entries a padded slot id ever
+    occupies are the stage-4 ``acc_v/acc_r`` init sentinels, and those are
+    materialized at NEG_INF/``n_rows`` — below every real candidate,
+    including arbitrarily negative ones (the threshold filter admits on
+    strict ``>``, so a NEG_INF sentinel never beats a NEG_INF-filtered
+    candidate either);
+  * the jnp reference oracle (``ref.bscsr_topk_ref_stacked``) DOES
+    materialize one score per budgeted slot, so it masks slots >= the
+    per-core live count to NEG_INF *before* its local top-k;
+  * ``finalize_candidates`` masks by the exact traced per-core live-slot
+    counts (and maps padded slot-map entries, INVALID_ROW, to sentinels),
+    so whatever sentinel candidates either path emits merge identically.
+
+Net: padded and unpadded paths are bit-identical end to end, on every
+inner_loop x stream_layout, including all-negative-score matrices —
+asserted by ``tests/test_executor.py::TestChurnStable``.
 """
 from __future__ import annotations
 
@@ -355,7 +390,9 @@ def bscsr_topk_spmv(
     flags: jnp.ndarray = None,  # (C, P, B//32) int32   (split only)
     *,
     k: int,
-    n_rows: int,           # rows per partition (uniform; pad rows if ragged)
+    n_rows: int,           # per-core slot budget (uniform; may be a bucketed
+                           # pad of the live count — see the scratch-shape
+                           # analysis in the module docstring)
     packets_per_step: int = 2,
     fmt_name: str = "F32",
     gather_mode: str = "take",

@@ -35,14 +35,24 @@ arrays already on device: **zero** host->device transfers, asserted by the
 the streaming-SpMV FPGA designs keeping the sparse stream resident in HBM
 next to the compute units across queries.
 
-Known limitation (ROADMAP): "steady state" means *queries between
-mutations*.  A mutable-index refresh changes the snapshot's shape signature
-(id space, slot map width, per-core slot count all grow), so the first query
-after an upsert re-pins and usually retraces; stale compiled fns are evicted
-(``_evict_stale``) so memory stays bounded, but making signatures
-churn-stable (bucketed id-space dims, value-traced sentinels) needs a kernel
-scratch-shape analysis first — naively padding the per-core slot count would
-let phantom zero-score slots displace real negative-score candidates.
+Churn-stable signatures: "steady state" includes *serve-while-ingest*.  A
+mutable-index refresh grows the id space, but a churn-stable index
+(``TopKSpMVConfig.churn_stable``, default) pads the churn-varying dims —
+tombstone bitmap length, slot-map width (= the per-core slot budget) and
+padded packet count — to power-of-two buckets, and this module passes the
+row-id sentinel as a device-pinned *traced* scalar instead of baking it into
+the trace.  The first query after an upsert then re-pins the new snapshot
+(one host->device upload of the changed arrays) but reuses the already
+compiled query fn: ZERO retraces until a bucket doubles (``retraces``
+counter in ``cache_info``; asserted over upsert->query cycles in
+``tests/test_executor.py``).  The padding is answer-preserving — the kernel
+scratch analysis lives in ``bscsr_topk_spmv.py``'s docstring, and the
+negative-score parity tests prove bit-identity against the unpadded path.
+Stale compiled fns are still evicted (``_evict_stale``) so a non-bucketed
+or compact()-reshaped working set cannot leak executables.
+
+See docs/SERVING.md for the full dispatch lifecycle and cache-key reference,
+and docs/ARCHITECTURE.md for the end-to-end data path.
 """
 from __future__ import annotations
 
@@ -86,7 +96,7 @@ class DeviceSnapshot:
     __slots__ = (
         "uid", "stream_layout", "streams", "row_starts", "rows_per_part",
         "slot_to_row", "tombstones", "args", "signature", "max_slots",
-        "n_rows_logical", "block_size", "fmt_name",
+        "n_rows_logical", "n_rows_sentinel", "block_size", "fmt_name",
     )
 
     def __init__(self, packed: ops.PackedPartitions, stream_layout: str):
@@ -108,16 +118,25 @@ class DeviceSnapshot:
             jnp.array(packed.slot_to_row)
             if packed.slot_to_row is not None else None
         )
-        # has_tombstones was computed once at snapshot build; an all-clear
-        # bitmap costs nothing per dispatch.
+        # The tombstone bitmap is shipped whenever the snapshot CARRIES one
+        # (mutable indexes always do, bucket-padded with False), not only
+        # when a bit is set: the first delete must flip a traced value, not
+        # the compiled signature.  Pure-base snapshots (None) stay free.
         self.tombstones = (
-            jnp.array(packed.tombstones) if packed.has_tombstones else None
+            jnp.array(packed.tombstones)
+            if packed.tombstones is not None else None
         )
         self.max_slots = packed.max_slots
         self.n_rows_logical = packed.n_rows_logical
+        # The row-id sentinel is a device-pinned TRACED scalar: the id space
+        # grows with every upsert, and baking it into the trace would force
+        # a retrace per refresh no matter how well the shapes are bucketed.
+        self.n_rows_sentinel = jnp.asarray(packed.n_rows_logical, jnp.int32)
         self.block_size = packed.block_size
         self.fmt_name = packed.value_format.name
-        args = list(self.streams) + [self.row_starts, self.rows_per_part]
+        args = list(self.streams) + [
+            self.row_starts, self.rows_per_part, self.n_rows_sentinel,
+        ]
         if self.slot_to_row is not None:
             args.append(self.slot_to_row)
         if self.tombstones is not None:
@@ -128,7 +147,7 @@ class DeviceSnapshot:
             tuple((a.shape, str(a.dtype)) for a in self.args),
             self.slot_to_row is not None,
             self.tombstones is not None,
-            self.max_slots, self.n_rows_logical, self.block_size,
+            self.max_slots, self.block_size,
             self.fmt_name,
         )
 
@@ -209,8 +228,14 @@ class QueryExecutor:
         self.q_bucketing = q_bucketing
         self._fns: dict = {}
         self._pinned: set = set()  # (uid, layout) keys this executor touched
+        self._last_sig: dict = {}  # (path, q) -> signature it last compiled
         self.fn_builds = 0
         self.dispatches = 0
+        # Builds caused by a (path, Q) pair CHANGING signature — i.e. genuine
+        # churn-triggered recompiles, as opposed to first-touch compiles.
+        # With churn-stable snapshot bucketing this stays 0 across upserts
+        # until a bucket doubles.
+        self.retraces = 0
 
     # -- dispatch ------------------------------------------------------------
 
@@ -232,31 +257,49 @@ class QueryExecutor:
         else:
             layout = stream_layout or packed.stream_layout
         snap = device_snapshot(packed, layout)
-        self._pinned.add((snap.uid, layout))
+        if (snap.uid, layout) not in self._pinned:
+            # A new pin means a snapshot refresh: drop dead pins now.  The
+            # zero-retrace steady state never misses the fn cache, so
+            # _evict_stale alone would let this set grow by one dead tuple
+            # per upsert forever.
+            self._pinned &= set(_DEVICE_CACHE.keys())
+            self._pinned.add((snap.uid, layout))
         key = (path, q, snap.signature)
         fn = self._fns.get(key)
         if fn is None:
-            self._evict_stale()           # misses mark a shifting working set
+            live = self._evict_stale()    # misses mark a shifting working set
             fn = self._build(path, q, snap)
             self._fns[key] = fn
             self.fn_builds += 1
+            prev = self._last_sig.get((path, q))
+            # A retrace is churn: this pair's previous signature is DEAD
+            # (its snapshots were replaced and collected).  A build while
+            # the previous signature still serves live snapshots is just a
+            # first touch for another collection sharing this interned
+            # executor — not a churn signal.
+            if prev is not None and prev != snap.signature and prev not in live:
+                self.retraces += 1
+            self._last_sig[(path, q)] = snap.signature
         return fn, snap
 
-    def _evict_stale(self) -> None:
+    def _evict_stale(self) -> set:
         """Drop compiled fns (and pin records) for dead snapshot signatures.
 
-        Under serve-while-ingest churn almost every snapshot version has a
-        distinct shape signature (slot map width, tombstone length and the
-        per-core slot count all grow with the id space), so without eviction
-        a long-lived interned executor would accumulate one compiled
-        executable per version ever served.  Signatures still live in the
-        device cache are kept — shape-sharing snapshots reuse their fns.
+        Under non-bucketed serve-while-ingest churn almost every snapshot
+        version has a distinct shape signature (slot map width, tombstone
+        length and the per-core slot count all grow with the id space), so
+        without eviction a long-lived interned executor would accumulate
+        one compiled executable per version ever served.  Signatures still
+        live in the device cache are kept — shape-sharing snapshots reuse
+        their fns.  Returns the live-signature set (the caller's retrace
+        accounting reuses it).
         """
         # list()/set() first: GC-driven weakref.finalize callbacks pop cache
         # entries and must not race the iteration
         live = {s.signature for s in list(_DEVICE_CACHE.values())}
         self._fns = {k: f for k, f in self._fns.items() if k[2] in live}
         self._pinned &= set(_DEVICE_CACHE.keys())
+        return live
 
     def query(
         self,
@@ -299,6 +342,7 @@ class QueryExecutor:
         return {
             "compiled_fns": len(self._fns),
             "fn_builds": self.fn_builds,
+            "retraces": self.retraces,                  # churn-driven rebuilds
             "dispatches": self.dispatches,
             "device_snapshots": len(self._pinned),      # this executor's pins
             "device_snapshots_process_wide": device_cache_size(),
@@ -314,20 +358,23 @@ class QueryExecutor:
         has_tomb = snap.tombstones is not None
         fmt = FORMATS[snap.fmt_name]
         big_k, k = self.big_k, self.k
-        max_slots, n_rows = snap.max_slots, snap.n_rows_logical
+        max_slots = snap.max_slots
 
         def split_args(arrs):
             streams = arrs[:n_streams]
             row_starts, rows_per = arrs[n_streams], arrs[n_streams + 1]
-            rest = arrs[n_streams + 2:]
+            n_rows = arrs[n_streams + 2]     # traced row-id sentinel scalar
+            rest = arrs[n_streams + 3:]
             slot_to_row = rest[0] if has_slot else None
             tombstones = rest[-1] if has_tomb else None
-            return streams, row_starts, rows_per, slot_to_row, tombstones
+            return streams, row_starts, rows_per, n_rows, slot_to_row, tombstones
 
         if path == "reference":
 
             def run(x, *arrs):
-                streams, row_starts, rows_per, slot, tombs = split_args(arrs)
+                streams, row_starts, rows_per, n_rows, slot, tombs = (
+                    split_args(arrs)
+                )
                 vals, cols, flags = streams
 
                 def one(xi):
@@ -357,7 +404,9 @@ class QueryExecutor:
                 kwargs["gather_mode"] = self.gather_mode
 
             def run(x, *arrs):
-                streams, row_starts, rows_per, slot, tombs = split_args(arrs)
+                streams, row_starts, rows_per, n_rows, slot, tombs = (
+                    split_args(arrs)
+                )
                 lv, lr = kernel(jnp.asarray(x, jnp.float32), *streams, **kwargs)
                 finalize = (
                     ops.finalize_candidates if q is None

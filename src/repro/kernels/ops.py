@@ -45,6 +45,10 @@ snapshot's kernel streams + finalize arrays on device exactly once (keyed by
 the snapshot ``uid`` assigned below, evicted when the host snapshot is
 collected), and a ``QueryExecutor`` fuses kernel + finalize into one cached
 jitted call — steady-state dispatch does zero host->device transfers.
+
+The end-to-end data path (encode -> fuse -> kernel -> finalize -> dispatch)
+is walked through in docs/ARCHITECTURE.md; docs/SERVING.md documents the
+dispatch lifecycle, cache keys and tuning knobs.
 """
 from __future__ import annotations
 
@@ -67,6 +71,31 @@ from repro.kernels.bscsr_topk_spmv import bscsr_topk_spmv, bscsr_topk_spmv_multi
 
 NEG_INF = ref_lib.NEG_INF
 INVALID_ROW = bscsr_lib.INVALID_ROW
+
+
+def pow2_bucket(n: int, minimum: int = 1) -> int:
+    """Next power-of-two >= max(n, minimum) — the churn-stable dim bucket.
+
+    A mutable index's snapshot dims (tombstone bitmap length, slot-map
+    width, padded packet count) grow with the id space, and every distinct
+    value is a distinct compiled-function signature.  Rounding them up to
+    power-of-two buckets makes a steady stream of upserts hit ONE signature
+    until a bucket doubles — O(log growth) retraces instead of O(upserts) —
+    the same discipline as the executor's power-of-two Q buckets.  See
+    docs/ARCHITECTURE.md ("where does a query retrace?").
+    """
+    return 1 << (max(int(n), minimum, 1) - 1).bit_length()
+
+
+def bucket_packets(n: int, multiple: int) -> int:
+    """Power-of-two packet bucket, kept a multiple of ``packets_per_step``.
+
+    The padded tail streams zero packets with no row-start flags, which the
+    kernels already treat as a continuation of the open sentinel row — so
+    the bucket changes HBM bytes (<= 2x worst case, zeros) but never the
+    answer.
+    """
+    return -(-pow2_bucket(n) // multiple) * multiple
 
 # Monotonic snapshot identities: the device-resident plane
 # (``kernels/executor.py``) pins each snapshot's arrays on device exactly
@@ -144,6 +173,19 @@ class PackedPartitions:
 
     @property
     def max_slots(self) -> int:
+        """Per-core candidate-slot budget — the kernel's static slot count.
+
+        For a segmented snapshot this is the slot-map width, which a
+        churn-stable mutable index pads to a power-of-two bucket: the
+        kernel/reference slot budget then keys one compiled signature per
+        bucket instead of one per refresh.  Padded slots beyond a core's
+        live count can never displace real candidates: the kernel only ever
+        materializes them as NEG_INF scratchpad sentinels, the reference
+        oracle masks them to NEG_INF before its local top-k, and
+        ``finalize_candidates`` masks by the exact traced per-core counts.
+        """
+        if self.slot_to_row is not None:
+            return int(self.slot_to_row.shape[1])
         return max(int(self.candidate_slots.max()), 1)
 
     @property
@@ -169,6 +211,32 @@ class PackedPartitions:
         if self.words is not None:
             return self.words
         return bscsr_lib.fuse_words(self.vals, self.cols, self.flags)
+
+    def signature_info(self) -> dict:
+        """The churn-varying dims that key compiled-query-fn signatures.
+
+        Each ``*_bucket`` is a padded (power-of-two for a churn-stable
+        mutable index) dim that enters the executor's shape signature; the
+        paired ``*_live`` value is the exact count the snapshot actually
+        uses.  A signature — and therefore a compiled query fn — is reused
+        until a bucket overflows, so ``bucket > live`` headroom is what
+        steady-state zero-retrace serving runs on.  Surfaced through
+        ``dispatch_info()`` (see docs/SERVING.md).
+        """
+        live_slots = (
+            int(np.max(self.num_slots)) if self.num_slots is not None
+            else int(np.max(self.rows_per_partition))
+        )
+        return {
+            "packets_bucket": int(self.vals.shape[1]),
+            "slot_bucket": self.max_slots,
+            "slots_live": live_slots,
+            "tombstone_bucket": (
+                int(self.tombstones.shape[0]) if self.tombstones is not None
+                else 0
+            ),
+            "rows_live": self.n_rows_logical,
+        }
 
 
 def stack_padded_streams(

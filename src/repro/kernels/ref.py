@@ -105,7 +105,12 @@ def bscsr_topk_ref_stacked(
     Scores are computed over a uniform ``max_rows`` segment budget; rows
     beyond a core's real count (sentinel/padding, which sum to 0, not
     NEG_INF) are masked before the local top-k so they can never displace
-    real candidates.  Returns (C, k) values and partition-local row ids.
+    real candidates.  This mask is load-bearing for churn-stable snapshot
+    bucketing: ``max_rows`` may be a power-of-two pad of the live slot
+    count, and the phantom slots it budgets MUST be materialized at NEG_INF
+    or their 0.0 segment sums would outrank real negative-score candidates
+    (the scratch-shape analysis in ``bscsr_topk_spmv.py``).  Returns (C, k)
+    values and partition-local row ids.
     """
     fmt = FORMATS[fmt] if isinstance(fmt, str) else fmt
 

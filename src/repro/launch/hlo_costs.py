@@ -38,6 +38,11 @@ _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 FREE_OPS = {
     "get-tuple-element", "tuple", "bitcast", "parameter", "constant",
     "after-all", "partition-id", "replica-id", "iota",
+    # calls are inlined control flow, not materializing ops: the callee's
+    # own ops carry the traffic.  (XLA:CPU wraps parallel loop fusions in a
+    # call to a non-"fused_"-named computation; counting the call's
+    # operands/results double-counted every such fusion's bytes.)
+    "call",
 }
 
 COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",

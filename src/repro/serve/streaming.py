@@ -91,5 +91,12 @@ class StreamingSimilarityService:
         return self.index.stats()
 
     def dispatch_info(self) -> dict:
-        """Executor cache stats: pinned snapshots, compiled fns, dispatches."""
+        """Executor cache + signature-bucket stats for the served snapshot.
+
+        The ``retraces`` counter is the serve-while-ingest health signal:
+        with ``churn_stable`` snapshots it stays flat across ingest (each
+        refresh re-pins arrays but reuses the compiled query fn) and only
+        moves when a signature bucket doubles or ``compact()`` reshapes the
+        partition plan — see the retrace table in docs/ARCHITECTURE.md.
+        """
         return self.index.dispatch_info()

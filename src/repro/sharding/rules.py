@@ -91,7 +91,11 @@ def _present(mesh: Mesh, target: MeshAxes) -> MeshAxes:
     if isinstance(target, str):
         return target if target in mesh.shape else None
     kept = tuple(t for t in target if t in mesh.shape)
-    return kept if kept else None
+    if not kept:
+        return None
+    # unwrap 1-tuples: P(("data",)) and P("data") shard identically, but
+    # PartitionSpec equality distinguishes them on current jax
+    return kept[0] if len(kept) == 1 else kept
 
 
 def logical_to_spec(

@@ -25,6 +25,29 @@ from repro.models import layers as L
 from repro.models import transformer
 
 
+def _stage_shard_map(fn, mesh: Mesh, in_specs, out_specs):
+    """shard_map manual over 'stage' only, across jax API generations.
+
+    Newer jax exposes ``jax.shard_map`` with ``axis_names`` selecting the
+    manual axes (and ``check_vma``); older releases only have
+    ``jax.experimental.shard_map.shard_map``, where the same thing is said
+    inside-out via ``auto`` = the axes left in GSPMD-auto mode (and
+    ``check_rep``).  Same compat split as ``core/topk_spmv.py``.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names={"stage"}, check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    auto = frozenset(mesh.axis_names) - {"stage"}
+    return _shard_map(
+        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        auto=auto, check_rep=False,
+    )
+
+
 def pipeline_applicable(cfg: ModelConfig, num_stages: int) -> bool:
     return (
         cfg.family in ("dense", "vlm")
@@ -95,13 +118,11 @@ def pipelined_loss_fn(
         )
         return outputs
 
-    outputs = jax.shard_map(
+    outputs = _stage_shard_map(
         stage_fn,
         mesh=mesh,
         in_specs=(P("stage"), P()),
         out_specs=P("stage"),
-        axis_names={"stage"},
-        check_vma=False,
     )(params["blocks"], x)
     final = outputs[-m:]                              # last stage's bank
     hidden = final.reshape(b, seq, cfg.d_model)

@@ -1,0 +1,81 @@
+"""Docs stay true: doctest the code blocks in docs/*.md, import every
+referenced ``repro.*`` symbol, and keep the README pointing at the docs.
+
+This is the CI docs-consistency gate: a renamed function, a dropped
+config knob or a broken example fails here instead of rotting silently
+in prose.
+"""
+import doctest
+import importlib
+import pathlib
+import re
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+DOCS = sorted((REPO / "docs").glob("*.md"))
+
+# Dotted repro.* references in backticks, e.g. `repro.kernels.ops.pow2_bucket`
+# or `repro.core.topk_spmv.TopKSpMVConfig.churn_stable`.
+SYMBOL_RE = re.compile(r"`(repro(?:\.\w+)+)`")
+
+
+def _resolve(dotted: str):
+    """Import the longest module prefix, then getattr the rest."""
+    parts = dotted.split(".")
+    last_err = None
+    for i in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:i]))
+        except ImportError as e:  # includes ModuleNotFoundError
+            last_err = e
+            continue
+        for attr in parts[i:]:
+            obj = getattr(obj, attr)  # AttributeError = symbol is gone
+        return obj
+    raise last_err or ImportError(dotted)
+
+
+def test_docs_exist():
+    names = {p.name for p in DOCS}
+    assert {"ARCHITECTURE.md", "SERVING.md"} <= names
+
+
+@pytest.mark.parametrize("path", DOCS, ids=lambda p: p.name)
+def test_doc_symbols_import(path):
+    symbols = sorted(set(SYMBOL_RE.findall(path.read_text())))
+    assert symbols, f"{path.name} references no repro.* symbols"
+    broken = []
+    for sym in symbols:
+        try:
+            _resolve(sym)
+        except (ImportError, AttributeError) as e:
+            broken.append(f"{sym} ({type(e).__name__}: {e})")
+    assert not broken, f"{path.name} references missing symbols: {broken}"
+
+
+@pytest.mark.parametrize("path", DOCS, ids=lambda p: p.name)
+def test_doc_examples_run(path):
+    """Every ``>>>`` example in the markdown executes and matches."""
+    # Drop the markdown fence lines: doctest would otherwise read a closing
+    # ``` as part of the last example's expected output.
+    text = "\n".join(
+        line for line in path.read_text().splitlines()
+        if not line.strip().startswith("```")
+    )
+    test = doctest.DocTestParser().get_doctest(text, {}, path.name, str(path), 0)
+    assert test.examples, f"{path.name} has no runnable examples"
+    runner = doctest.DocTestRunner(
+        optionflags=doctest.ELLIPSIS | doctest.NORMALIZE_WHITESPACE
+    )
+    runner.run(test, clear_globs=False)
+    assert runner.failures == 0, (
+        f"{runner.failures} doctest failure(s) in {path.name} — "
+        "run `python -m doctest` style examples by hand for details"
+    )
+
+
+def test_readme_links_docs():
+    readme = (REPO / "README.md").read_text()
+    for target in ("docs/ARCHITECTURE.md", "docs/SERVING.md"):
+        assert target in readme, f"README.md must link {target}"

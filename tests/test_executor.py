@@ -142,10 +142,13 @@ class TestDevicePinning:
         assert key not in executor_lib._DEVICE_CACHE
 
     def test_stale_fns_evicted_under_churn(self):
-        """Every refresh changes the shape signature; dead signatures' fns
-        must be evicted or a long-lived service leaks compiled executables."""
+        """Without churn-stable bucketing every refresh changes the shape
+        signature; dead signatures' fns must be evicted or a long-lived
+        service leaks compiled executables.  (With ``churn_stable`` — the
+        default — signatures are reused instead; see TestChurnStable.)"""
         csr, x = make_problem(seed=18)
-        cfg = TopKSpMVConfig(big_k=BIG_K, k=16, num_partitions=2, block_size=32)
+        cfg = TopKSpMVConfig(big_k=BIG_K, k=16, num_partitions=2, block_size=32,
+                             churn_stable=False)
         index = MutableTopKSpMVIndex(csr, cfg)
         ex = executor_lib.QueryExecutor(big_k=BIG_K, k=16)
         xd = jnp.asarray(x)
@@ -242,3 +245,213 @@ class TestZeroTransfer:
         with pytest.raises(Exception):
             with jax.transfer_guard_host_to_device("disallow"):
                 ops.topk_spmv_blocked(xd, packed, BIG_K, k=8)[0].block_until_ready()
+
+
+class TestChurnStable:
+    """Churn-stable signatures: zero retraces under ingest, padded parity.
+
+    The hazard being guarded (see the scratch-shape analysis in
+    ``bscsr_topk_spmv.py``): a padded per-core slot budget must never let a
+    phantom zero-score slot displace a real negative-score candidate in the
+    k-sized scratchpad.  Parity is therefore asserted bit-identically
+    against the unpadded (``churn_stable=False``) path on matrices whose
+    true top-k scores are ALL negative.
+    """
+
+    @staticmethod
+    def _negative_problem(n_rows=60, n_cols=32, mean_nnz=6, seed=21):
+        """A collection whose every live score is strictly negative."""
+        base = bscsr.synthetic_embedding_csr(
+            n_rows, n_cols, mean_nnz, "gamma", seed, normalize=False
+        )
+        csr = bscsr.CSRMatrix(
+            indptr=base.indptr,
+            indices=base.indices,
+            data=(-np.abs(base.data) - 0.01).astype(np.float32),
+            shape=base.shape,
+        )
+        x = np.abs(
+            np.random.default_rng(seed + 1).standard_normal(n_cols)
+        ).astype(np.float32) + 0.1
+        return csr, x
+
+    @staticmethod
+    def _mutate(index, rng):
+        """Identical churn for both arms: appends, a replace and a delete."""
+        index.add_rows([
+            (np.arange(5, dtype=np.int32),
+             -np.abs(rng.standard_normal(5)).astype(np.float32) - 0.01)
+            for _ in range(2)
+        ])
+        index.replace_rows([4], [(
+            np.arange(4, dtype=np.int32),
+            -np.abs(rng.standard_normal(4)).astype(np.float32) - 0.01,
+        )])
+        index.delete_rows([9])
+
+    def _arms(self):
+        csr, x = self._negative_problem()
+        arms = []
+        for stable in (True, False):
+            cfg = TopKSpMVConfig(
+                big_k=BIG_K, k=8, num_partitions=2, block_size=32,
+                churn_stable=stable,
+            )
+            index = MutableTopKSpMVIndex(csr, cfg)
+            self._mutate(index, np.random.default_rng(22))
+            arms.append(index)
+        padded, exact = arms
+        # The premise: the stable arm really is padded past the live counts.
+        info = padded.packed.signature_info()
+        assert info["slot_bucket"] > info["slots_live"]
+        assert info["tombstone_bucket"] > info["rows_live"]
+        assert padded.packed.max_slots > exact.packed.max_slots
+        return padded, exact, x
+
+    @pytest.mark.parametrize("layout", LAYOUTS)
+    def test_negative_score_padded_parity_all_loops(self, layout):
+        padded, exact, x = self._arms()
+        xd = jnp.asarray(x)
+        for loop in INNER_LOOPS:
+            got = ops.topk_spmv_blocked(
+                xd, padded.packed, BIG_K, k=8, inner_loop=loop,
+                stream_layout=layout,
+            )
+            want = ops.topk_spmv_blocked(
+                xd, exact.packed, BIG_K, k=8, inner_loop=loop,
+                stream_layout=layout,
+            )
+            # the premise again: the true top-k really is negative
+            assert float(np.asarray(want[0])[0]) < 0
+            assert_bit_identical(got, want)
+
+    @pytest.mark.parametrize("layout", LAYOUTS)
+    def test_negative_score_padded_parity_batched(self, layout):
+        padded, exact, x = self._arms()
+        xs = jnp.asarray(np.stack([x, 2.0 * x, 0.5 * x]))
+        for loop in INNER_LOOPS:
+            got = ops.topk_spmv_batched(
+                xs, padded.packed, BIG_K, k=8, inner_loop=loop,
+                stream_layout=layout,
+            )
+            want = ops.topk_spmv_batched(
+                xs, exact.packed, BIG_K, k=8, inner_loop=loop,
+                stream_layout=layout,
+            )
+            assert float(np.asarray(want[0])[0, 0]) < 0
+            assert_bit_identical(got, want)
+
+    def test_negative_score_padded_parity_reference_and_executor(self):
+        padded, exact, x = self._arms()
+        xd = jnp.asarray(x)
+        ex = executor_lib.QueryExecutor(big_k=BIG_K, k=8)
+        for path in ("kernel", "reference"):
+            assert_bit_identical(
+                ex.query(xd, padded.packed, path=path),
+                ex.query(xd, exact.packed, path=path),
+            )
+
+    def test_zero_retrace_across_upsert_query_cycles(self):
+        """3 consecutive upsert->query cycles: the refresh re-pins arrays but
+        never rebuilds a compiled fn (trace counter), and repeated queries
+        between mutations still move zero bytes host->device."""
+        csr, x = make_problem(seed=23)
+        cfg = TopKSpMVConfig(big_k=BIG_K, k=16, num_partitions=2, block_size=32)
+        index = MutableTopKSpMVIndex(csr, cfg)
+        ex = executor_lib.QueryExecutor(big_k=BIG_K, k=16)
+        xd = jnp.asarray(x)
+        xs = jnp.asarray(
+            np.random.default_rng(24).standard_normal((3, 64)).astype(np.float32)
+        )
+        rng = np.random.default_rng(25)
+        # Warm into the steady state: the FIRST append past the build-time
+        # packet cap is a one-time cold event (the cap jumps to its pow2
+        # bucket); everything after serves from stable signatures.
+        ex.query(xd, index.packed)
+        ex.query_batched(xs, index.packed)
+        index.add_rows([(np.arange(5, dtype=np.int32),
+                         rng.standard_normal(5).astype(np.float32))])
+        ex.query(xd, index.packed)
+        ex.query_batched(xs, index.packed)
+        builds = ex.fn_builds
+        retraces = ex.retraces
+        for _ in range(3):
+            index.add_rows([(np.arange(5, dtype=np.int32),
+                             rng.standard_normal(5).astype(np.float32))])
+            # first post-upsert query pins the new snapshot (one upload)...
+            first = ex.query(xd, index.packed)
+            firstb = ex.query_batched(xs, index.packed)
+            # ...but compiles nothing, and steady queries transfer nothing.
+            with jax.transfer_guard_host_to_device("disallow"):
+                again = ex.query(xd, index.packed)
+                againb = ex.query_batched(xs, index.packed)
+                again[1].block_until_ready()
+                againb[1].block_until_ready()
+            assert_bit_identical(first, again)
+            assert_bit_identical(firstb, againb)
+        assert ex.fn_builds == builds
+        assert ex.retraces == retraces
+
+    def test_delete_keeps_signature_stable(self):
+        """The first delete flips tombstone VALUES, not the signature — the
+        bitmap rides along (bucket-padded) from the very first snapshot."""
+        csr, x = make_problem(seed=26)
+        cfg = TopKSpMVConfig(big_k=BIG_K, k=16, num_partitions=2, block_size=32)
+        index = MutableTopKSpMVIndex(csr, cfg)
+        ex = executor_lib.QueryExecutor(big_k=BIG_K, k=16)
+        xd = jnp.asarray(x)
+        # warm past the one-time packet-cap jump of the first-ever mutation
+        bottom = int(np.asarray(ex.query(xd, index.packed)[1])[-1])
+        index.delete_rows([bottom])
+        before = ex.query(xd, index.packed)
+        builds = ex.fn_builds
+        retraces = ex.retraces
+        target = int(np.asarray(before[1])[0])  # the current top hit
+        index.delete_rows([target])
+        _, rows = ex.query(xd, index.packed)
+        assert target not in set(np.asarray(rows).tolist())
+        assert ex.fn_builds == builds and ex.retraces == retraces
+
+    def test_unstable_config_still_retraces(self):
+        """The knob works both ways: churn_stable=False restores the exact
+        dims, so the same churn really does change signatures."""
+        csr, x = make_problem(seed=27)
+        cfg = TopKSpMVConfig(big_k=BIG_K, k=16, num_partitions=2, block_size=32,
+                             churn_stable=False)
+        index = MutableTopKSpMVIndex(csr, cfg)
+        ex = executor_lib.QueryExecutor(big_k=BIG_K, k=16)
+        xd = jnp.asarray(x)
+        ex.query(xd, index.packed)
+        rng = np.random.default_rng(28)
+        index.add_rows([(np.arange(5, dtype=np.int32),
+                         rng.standard_normal(5).astype(np.float32))])
+        gc.collect()  # the replaced snapshot must be dead to count as churn
+        ex.query(xd, index.packed)
+        assert ex.retraces == 1
+
+    def test_second_collection_is_first_touch_not_retrace(self):
+        """Two collections with different shapes sharing one executor: each
+        first query is a first-touch build, and alternating between the
+        LIVE collections afterwards is pure cache hits — `retraces` must
+        stay 0 (it is the churn health signal, docs/SERVING.md)."""
+        csr_a, x = make_problem(seed=29)
+        csr_b, _ = make_problem(n_rows=77, seed=30)
+        cfg = TopKSpMVConfig(big_k=BIG_K, k=16, num_partitions=2, block_size=32)
+        a = MutableTopKSpMVIndex(csr_a, cfg)
+        b = MutableTopKSpMVIndex(csr_b, cfg)
+        assert a.packed.signature_info() != b.packed.signature_info()
+        ex = executor_lib.QueryExecutor(big_k=BIG_K, k=16)
+        xd = jnp.asarray(x)
+        for _ in range(2):
+            ex.query(xd, a.packed)
+            ex.query(xd, b.packed)
+        assert ex.fn_builds == 2
+        assert ex.retraces == 0
+
+    def test_pow2_buckets(self):
+        assert [ops.pow2_bucket(n) for n in (1, 2, 3, 4, 5, 130)] == [
+            1, 2, 4, 4, 8, 256,
+        ]
+        assert ops.pow2_bucket(0, minimum=1) == 1
+        assert ops.bucket_packets(5, 2) == 8
+        assert ops.bucket_packets(9, 3) == 18  # pow2 rounded up to the step

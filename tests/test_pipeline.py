@@ -39,6 +39,16 @@ print('PIPELINE_OK')
 
 
 @pytest.mark.slow
+@pytest.mark.skipif(
+    not hasattr(__import__("jax"), "shard_map"),
+    reason=(
+        "blocked on jax >= 0.5 (jax.shard_map with axis_names): the "
+        "pipeline is manual over 'stage' ONLY, and on older jax the "
+        "equivalent jax.experimental.shard_map auto= path lowers to a "
+        "PartitionId op that XLA's SPMD partitioner rejects "
+        "('PartitionId instruction is not supported for SPMD partitioning')"
+    ),
+)
 def test_pipeline_matches_sequential_16dev():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
