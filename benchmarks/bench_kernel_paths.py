@@ -230,6 +230,135 @@ def run(verbose: bool = True, n_rows: int = 8192, n_cols: int = 256,
               f"(prep {prep_us['executor']:8.1f} us, cold {cold_s*1e3:.0f} ms)"
               f"  overhead speedup {overhead_speedup:.1f}x")
 
+    # --- sweep 5: per-partition mixed-precision streams (recall-targeted) ---
+    # Hot/cold collection: a few partitions carry full-magnitude scores, the
+    # rest are scaled down (cold shards never contend for the global top-k) —
+    # the regime where per-partition formats beat any single uniform format.
+    # recall@8 is measured THROUGH the kernel at big_k = k = 8, where the
+    # Eq. (1) partition term is exactly zero, so the measurement isolates
+    # quantization loss.  Parity: the grouped tagged-stream dispatch must be
+    # bit-identical to the same snapshot's f32 split twins on every inner
+    # loop, single and batched.
+    from repro.core import partition as partition_lib
+    from repro.core.adaptive import assign_partition_formats
+    from repro.kernels import ref as ref_lib
+
+    recall_target = 0.99
+    hot_parts = max(1, cores // 4)
+    pplan = partition_lib.PartitionPlan.build(n_rows, cores)
+    hot_end = int(pplan.row_starts[hot_parts]) if hot_parts < cores else n_rows
+    scales = np.ones(n_rows, np.float32)
+    scales[hot_end:] = 0.1 if smoke else 0.25
+    mp_csr = bscsr.scale_rows(csr, scales)
+
+    fmt_plan, _ = assign_partition_formats(
+        mp_csr, cores, recall_target, k=K, n_queries=16
+    )
+    mp_packs = {
+        "mixed": ops.pack_partitions(
+            mp_csr, cores, block, packets_multiple=T_STEP,
+            stream_layout="fused", value_formats=fmt_plan.formats,
+        ),
+        "BF16": ops.pack_partitions(mp_csr, cores, block, "BF16",
+                                    packets_multiple=T_STEP,
+                                    stream_layout="fused"),
+        "F32": ops.pack_partitions(mp_csr, cores, block, "F32",
+                                   packets_multiple=T_STEP,
+                                   stream_layout="fused"),
+    }
+
+    s_eval = 8 if smoke else 64
+    xs_eval = rng.standard_normal((s_eval, n_cols)).astype(np.float32)
+    exact_rows = [
+        set(ref_lib.csr_topk_numpy(
+            mp_csr.indptr, mp_csr.indices, mp_csr.data, xq, K)[1].tolist())
+        for xq in xs_eval
+    ]
+
+    def measured_recall(p) -> float:
+        # big_k == k kills the partition term: recall@8 here is pure
+        # quantization loss, the quantity the autotuner budgets.
+        _, rr = ops.topk_spmv_batched(
+            jnp.asarray(xs_eval), p, big_k=K, k=K, packets_per_step=T_STEP
+        )
+        rr = np.asarray(rr)
+        return float(np.mean([
+            len(set(rr[i].tolist()) & exact_rows[i]) / K
+            for i in range(s_eval)
+        ]))
+
+    recalls = {name: measured_recall(p) for name, p in mp_packs.items()}
+    vbpn = {name: p.value_bytes_per_nnz for name, p in mp_packs.items()}
+    value_bytes_ratio_bf16 = vbpn["BF16"] / vbpn["mixed"]
+
+    parity = {}
+    x_par = jnp.asarray(xs_eval[0])
+    for loop in (INNER_LOOPS if smoke else ("legacy", "linear")):
+        fv, fr = ops.topk_spmv_blocked(
+            x_par, mp_packs["mixed"], BIG_K, k=K, packets_per_step=T_STEP,
+            inner_loop=loop,
+        )
+        sv, sr = ops.topk_spmv_blocked(
+            x_par, mp_packs["mixed"], BIG_K, k=K, packets_per_step=T_STEP,
+            inner_loop=loop, stream_layout="split",
+        )
+        bfv, bfr = ops.topk_spmv_batched(
+            jnp.asarray(xs_eval), mp_packs["mixed"], BIG_K, k=K,
+            packets_per_step=T_STEP, inner_loop=loop,
+        )
+        bsv, bsr = ops.topk_spmv_batched(
+            jnp.asarray(xs_eval), mp_packs["mixed"], BIG_K, k=K,
+            packets_per_step=T_STEP, inner_loop=loop, stream_layout="split",
+        )
+        parity[loop] = bool(
+            np.array_equal(np.asarray(fv), np.asarray(sv))
+            and np.array_equal(np.asarray(fr), np.asarray(sr))
+            and np.array_equal(np.asarray(bfv), np.asarray(bsv))
+            and np.array_equal(np.asarray(bfr), np.asarray(bsr))
+        )
+
+    ts = time_paired({
+        name: (lambda p=p: ops.topk_spmv_blocked(
+            x_par, p, BIG_K, k=K, packets_per_step=T_STEP,
+        )[0].block_until_ready())
+        for name, p in mp_packs.items()
+    }, repeats)
+    for name, samples in ts.items():
+        t = float(np.median(samples))
+        results.append({
+            "sweep": "mixed_precision", "fmt": name, "inner_loop": "linear",
+            "layout": "fused", "q": 1,
+            "value_bytes_per_nnz": vbpn[name],
+            "recall_at_8_vs_exact": recalls[name],
+            "us_per_call": t * 1e6, "gnnz_per_s": nnz / t / 1e9,
+        })
+        if verbose:
+            print(f"mixed_prec fmt={name:5s} "
+                  f"{vbpn[name]:5.3f} value B/nnz  "
+                  f"recall@8 {recalls[name]:.4f}  {t*1e3:8.2f} ms")
+    mixed_precision = {
+        "recall_target": recall_target,
+        "format_histogram": fmt_plan.histogram,
+        "formats": list(fmt_plan.formats),
+        "predicted_recall": fmt_plan.predicted_recall,
+        "measured_recall_at_8": recalls,
+        "value_bytes_per_nnz": vbpn,
+        "value_bytes_ratio_vs_bf16": value_bytes_ratio_bf16,
+        "value_bytes_ratio_vs_f32": vbpn["F32"] / vbpn["mixed"],
+        "heterogeneous_parity_by_inner_loop": parity,
+    }
+    if verbose:
+        print(f"mixed_prec assignment {fmt_plan.histogram} -> "
+              f"{value_bytes_ratio_bf16:.2f}x fewer value bytes than BF16 "
+              f"at recall@8 {recalls['mixed']:.4f} "
+              f"(BF16 {recalls['BF16']:.4f}, target {recall_target})")
+    if smoke:
+        # CI tripwires: heterogeneous decode must stay bit-exact against the
+        # f32 twins, beat uniform F32 on value bytes, and hold the target.
+        assert all(parity.values()), f"heterogeneous parity broke: {parity}"
+        assert vbpn["mixed"] < vbpn["F32"], vbpn
+        assert recalls["mixed"] >= recall_target, recalls
+
     by = {
         (r["sweep"], r["fmt"], r["inner_loop"], r["layout"],
          r.get("gather_mode"), r.get("dispatch"), r["q"]): r
@@ -265,6 +394,7 @@ def run(verbose: bool = True, n_rows: int = 8192, n_cols: int = 256,
         "speedup_fused_vs_split_bf16": speedup_fused,
         f"speedup_batched_q{qmax}_vs_sequential": speedup_batch,
         "executor_dispatch": dispatch,
+        "mixed_precision": mixed_precision,
     }
     if not smoke:  # CI smoke must not clobber the tracked repo-root numbers
         merge_into_bench_json(payload)

@@ -49,6 +49,20 @@ All sub-fields are little-endian within a word (value ``2i`` in the low half,
 Fused and split forms are bit-identical in content and total bytes; the win
 is stream *count* (3 -> 1 contiguous burst per core per step).
 
+*Tagged* fused packets (mixed-precision snapshots) prepend ONE header word
+carrying the partition's :class:`~repro.core.quantization.ValueFormat` code::
+
+  word index   0     | 1 ....... B/32 | B/32+1 .. +Wc | .............. end
+               +-----+----------------+---------------+--------------------+
+  packet row   | tag | flags (B bits) | cols          | vals (width of the |
+  (1+W int32)  |     |                |               |  tagged class)     |
+               +-----+----------------+---------------+--------------------+
+
+Partitions are grouped by value *storage width* (4B / 2B / 1B classes) so
+each group stays rectangular; within the shared-width 2-byte class the tag
+is what lets the kernel decode BF16 vs Q15 packets at run time.  The
+homogeneous layout above is unchanged — no header, no churn.
+
 Bytes per nnz (B = 256, idx = int16, flag bit amortized):
 
   format   fused/split stream   plain COO (f32)   note
@@ -95,7 +109,7 @@ from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.quantization import FORMATS, ValueFormat, quantize
+from repro.core.quantization import F32, FORMATS, ValueFormat, host_dequantize, quantize
 
 FLAG_WORD_BITS = 32
 
@@ -304,7 +318,7 @@ def fused_word_counts(
 
 
 def fuse_words(
-    vals: np.ndarray, cols: np.ndarray, flags: np.ndarray
+    vals: np.ndarray, cols: np.ndarray, flags: np.ndarray, tag: Optional[int] = None
 ) -> np.ndarray:
     """Pack split ``(..., B)``/``(..., B//32)`` arrays into fused int32 words.
 
@@ -313,16 +327,25 @@ def fuse_words(
     ``view(int32)``, so ``defuse_stream`` round-trips losslessly and the
     in-kernel decode (`kernels/bscsr_topk_spmv._decode_fused_tile`)
     reconstructs bit-identical operands.
+
+    ``tag`` (mixed-precision snapshots only) prepends one header word per
+    packet row carrying the partition's value-format code — see the tagged
+    diagram in the module docstring.  ``None`` keeps the homogeneous layout.
     """
     flag_w = np.ascontiguousarray(flags)
     col_w = np.ascontiguousarray(cols).view(np.int32)
     val_w = np.ascontiguousarray(vals).view(np.int32)
-    return np.concatenate([flag_w, col_w, val_w], axis=-1)
+    parts = [flag_w, col_w, val_w]
+    if tag is not None:
+        header = np.full(flag_w.shape[:-1] + (1,), int(tag), dtype=np.int32)
+        parts.insert(0, header)
+    return np.concatenate(parts, axis=-1)
 
 
-def fuse_stream(bs: BSCSRMatrix) -> np.ndarray:
+def fuse_stream(bs: BSCSRMatrix, tagged: bool = False) -> np.ndarray:
     """A stream's fused ``(P, W)`` int32 word form (see :func:`fuse_words`)."""
-    return fuse_words(bs.vals, bs.cols, bs.flags)
+    tag = bs.value_format.code if tagged else None
+    return fuse_words(bs.vals, bs.cols, bs.flags, tag=tag)
 
 
 def defuse_stream(
@@ -330,19 +353,63 @@ def defuse_stream(
     block_size: int,
     value_format: ValueFormat | str,
     col_dtype,
+    tagged: bool = False,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Fused ``(P, W)`` words -> ``(vals, cols, flags)`` split arrays (host)."""
+    """Fused ``(P, W)`` words -> ``(vals, cols, flags)`` split arrays (host).
+
+    For ``tagged`` streams the header word of every packet must match
+    ``value_format``'s code; the header is stripped before the split.
+    """
     fmt = FORMATS[value_format] if isinstance(value_format, str) else value_format
     wf, wc, wv = fused_word_counts(block_size, fmt, col_dtype)
-    if words.shape[-1] != wf + wc + wv:
+    header = 1 if tagged else 0
+    if words.shape[-1] != header + wf + wc + wv:
         raise ValueError(
-            f"fused stream width {words.shape[-1]} != expected {wf + wc + wv} "
-            f"(B={block_size}, fmt={fmt.name}, cols={np.dtype(col_dtype).name})"
+            f"fused stream width {words.shape[-1]} != expected "
+            f"{header + wf + wc + wv} (B={block_size}, fmt={fmt.name}, "
+            f"cols={np.dtype(col_dtype).name}, tagged={tagged})"
         )
+    if tagged:
+        tags = words[..., 0]
+        if tags.size and not (tags == fmt.code).all():
+            raise ValueError(
+                f"tagged stream header mismatch: expected code {fmt.code} "
+                f"({fmt.name}), saw {sorted(np.unique(tags).tolist())}"
+            )
+        words = words[..., 1:]
     flags = np.ascontiguousarray(words[..., :wf])
     cols = np.ascontiguousarray(words[..., wf : wf + wc]).view(np.dtype(col_dtype))
     vals = np.ascontiguousarray(words[..., wf + wc :]).view(fmt.np_dtype)
     return vals, cols, flags
+
+
+def dequantize_stream(bs: BSCSRMatrix) -> BSCSRMatrix:
+    """An F32 twin of a stream: values exactly dequantized on the host.
+
+    Mixed-precision snapshots keep these as their split arrays so the
+    reference oracle, split-layout kernel, and delta machinery see one
+    uniform dtype; the native quantized bytes live in the tagged fused
+    groups.  Dequantization is bit-exact in f32 for every ladder format.
+    """
+    if bs.value_format.storage_dtype == "float32":
+        return bs
+    return dataclasses.replace(
+        bs, vals=host_dequantize(bs.vals, bs.value_format), value_format=F32
+    )
+
+
+def requantize_stream(bs: BSCSRMatrix, fmt: ValueFormat) -> BSCSRMatrix:
+    """Re-encode a stream's values in another format, structure-preserving.
+
+    Only the value payload changes — flags and cols (and therefore the slot
+    structure a mutable index's slot map is aligned with) are untouched, so
+    a per-partition format promotion never invalidates delta segments or
+    the host-side slot bookkeeping.
+    """
+    if fmt == bs.value_format:
+        return bs
+    vals = host_dequantize(bs.vals, bs.value_format)
+    return dataclasses.replace(bs, vals=quantize(vals, fmt), value_format=fmt)
 
 
 INVALID_ROW = np.int32(np.iinfo(np.int32).max)
@@ -544,6 +611,21 @@ def synthetic_embedding_csr(
         norms = np.sqrt(np.maximum(sq, 1e-12))
         data = data / np.repeat(norms, lens).astype(np.float32)
     return CSRMatrix(indptr=indptr, indices=indices, data=data, shape=(n_rows, n_cols))
+
+
+def scale_rows(csr: CSRMatrix, scales: np.ndarray) -> CSRMatrix:
+    """Row-wise rescale of a CSR's values (``scales``: one factor per row).
+
+    Models collections whose shards carry systematically different score
+    magnitudes (hot vs cold partitions) — the regime where per-partition
+    value precision pays: low-magnitude partitions never contend for the
+    global top-k, so their values tolerate aggressive quantization.
+    """
+    scales = np.asarray(scales, np.float32)
+    if scales.shape != (csr.shape[0],):
+        raise ValueError(f"need one scale per row, got {scales.shape}")
+    data = csr.data * np.repeat(scales, np.diff(csr.indptr)).astype(np.float32)
+    return dataclasses.replace(csr, data=data)
 
 
 def sparsify_topm(dense: np.ndarray, m_keep: int, normalize: bool = True) -> CSRMatrix:

@@ -79,6 +79,54 @@ def monte_carlo_precision(
     return 1.0 - lost / (trials * big_k)
 
 
+# ---------------------------------------------------------------------------
+# Quantization-induced recall loss (per-partition mixed-precision assignment)
+#
+# The hypergeometric Eq. (1) above models the *partition* term of recall
+# loss; these helpers model the *quantization* term: a true top-k member is
+# lost when value rounding drops its score below the query's k-th exact
+# score (the admission threshold).  Counted per row over a calibration query
+# sample, the losses are additive across partitions, which is what lets the
+# greedy ladder descent in ``core/adaptive.py`` budget them independently.
+# ---------------------------------------------------------------------------
+
+def csr_batch_scores(
+    indptr: np.ndarray, indices: np.ndarray, data: np.ndarray, xs: np.ndarray
+) -> np.ndarray:
+    """(S, M) query batch -> (S, N) exact row scores of a host CSR."""
+    xs = np.asarray(xs, np.float32)
+    prods = np.asarray(data, np.float32)[None, :] * xs[:, indices]  # (S, nnz)
+    n = len(indptr) - 1
+    out = np.zeros((xs.shape[0], n), np.float32)
+    nonempty = np.diff(indptr) > 0
+    if nonempty.any():
+        # reduceat over nonempty row starts only: empty rows contribute no
+        # entries, so each segment is exactly one nonempty row's products
+        # (reduceat misbehaves on repeated boundaries otherwise).
+        out[:, nonempty] = np.add.reduceat(
+            prods, np.asarray(indptr[:-1])[nonempty], axis=1
+        )
+    return out
+
+
+def topk_thresholds(scores: np.ndarray, k: int) -> np.ndarray:
+    """(S, N) scores -> (S,) k-th largest value per query (admission bar)."""
+    k = min(k, scores.shape[1])
+    return np.partition(scores, scores.shape[1] - k, axis=1)[:, scores.shape[1] - k]
+
+
+def quantization_loss_per_row(
+    exact: np.ndarray, quant: np.ndarray, thresholds: np.ndarray
+) -> np.ndarray:
+    """(N,) count of (query, row) events where rounding loses a top-k member.
+
+    A row is lost for query ``s`` when its exact score clears the query's
+    admission threshold but its quantized score does not.
+    """
+    t = np.asarray(thresholds)[:, None]
+    return ((exact >= t) & (quant < t)).sum(axis=0).astype(np.int64)
+
+
 def min_partitions_for_precision(
     n_rows: int, k: int, big_k: int, target: float = 0.99
 ) -> int:

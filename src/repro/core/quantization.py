@@ -14,7 +14,7 @@ datapath, so we provide two things:
 from __future__ import annotations
 
 import dataclasses
-from typing import Union
+from typing import Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -29,6 +29,7 @@ class ValueFormat:
     name: str
     storage_dtype: str      # "float32" | "bfloat16" | "int8" | "int16"
     frac_bits: int = 0      # Q-format fractional bits (fixed point only)
+    code: int = -1          # stream-header tag for mixed-precision snapshots
 
     @property
     def is_fixed_point(self) -> bool:
@@ -57,12 +58,52 @@ class ValueFormat:
 # Q1.19 (20 bit) -> int16 Q0.15 is the closest native narrow fixed point with
 # headroom; Q1.24 (25 bit) -> int16 Q0.15 as well in hardware but simulated at 24
 # fractional bits in accuracy studies; int8 Q0.7 is the aggressive TPU-only point.
-F32 = ValueFormat("F32", "float32")
-BF16 = ValueFormat("BF16", "bfloat16")
-Q15 = ValueFormat("Q15", "int16", frac_bits=15)
-Q7 = ValueFormat("Q7", "int8", frac_bits=7)
+F32 = ValueFormat("F32", "float32", code=0)
+BF16 = ValueFormat("BF16", "bfloat16", code=1)
+Q15 = ValueFormat("Q15", "int16", frac_bits=15, code=2)
+Q7 = ValueFormat("Q7", "int8", frac_bits=7, code=3)
 
 FORMATS = {f.name: f for f in (F32, BF16, Q15, Q7)}
+FORMAT_BY_CODE = {f.code: f for f in FORMATS.values()}
+
+
+@dataclasses.dataclass(frozen=True)
+class TaggedFormatClass:
+    """A storage-width class of a heterogeneous (mixed-precision) stream.
+
+    A mixed-precision snapshot groups its partitions by value storage width
+    so each group keeps a rectangular fused word array; within a class the
+    per-packet header tag selects the member format at decode time (only the
+    2-byte class has more than one member today: BF16 vs Q15).
+    """
+
+    name: str
+    bytes_per_value: int
+    members: Tuple[str, ...]  # ValueFormat names sharing this storage width
+
+    @property
+    def member_formats(self) -> Tuple[ValueFormat, ...]:
+        return tuple(FORMATS[m] for m in self.members)
+
+
+TAG4 = TaggedFormatClass("TAG4", 4, ("F32",))
+TAG2 = TaggedFormatClass("TAG2", 2, ("BF16", "Q15"))
+TAG1 = TaggedFormatClass("TAG1", 1, ("Q7",))
+
+WIDTH_CLASSES = {c.name: c for c in (TAG4, TAG2, TAG1)}
+
+
+def width_class_of(fmt: ValueFormat) -> TaggedFormatClass:
+    """The tagged stream class a value format is dispatched under."""
+    for cls in WIDTH_CLASSES.values():
+        if fmt.name in cls.members:
+            return cls
+    raise KeyError(fmt.name)
+
+
+# Every ``fmt_name`` the kernel front-end resolves: plain homogeneous formats
+# plus the tagged width classes used by heterogeneous fused streams.
+STREAM_FORMATS: dict = {**FORMATS, **WIDTH_CLASSES}
 
 
 def quantize(values: Array, fmt: ValueFormat) -> np.ndarray:
@@ -87,6 +128,20 @@ def dequantize(stored: Array, fmt: ValueFormat) -> jnp.ndarray:
     if fmt.storage_dtype == "bfloat16":
         return x.astype(jnp.float32)
     return x.astype(jnp.float32) * jnp.float32(fmt.scale)
+
+
+def host_dequantize(stored: np.ndarray, fmt: ValueFormat) -> np.ndarray:
+    """Decode stored values back to float32 on the host (numpy, bit-exact).
+
+    Every ladder format round-trips exactly through float32 (bf16 is a
+    truncated f32; Q7/Q15 grids are dyadic rationals well inside f32 range),
+    so heterogeneous snapshots can keep exactly-dequantized f32 split arrays
+    for the reference oracle and delta machinery.
+    """
+    x = np.asarray(stored)
+    if fmt.is_fixed_point:
+        return x.astype(np.float32) * np.float32(fmt.scale)
+    return x.astype(np.float32)
 
 
 def simulate_fixed_point(values: Array, total_bits: int, int_bits: int = 1) -> np.ndarray:

@@ -41,6 +41,11 @@ class SimilaritySearchStats:
     last_refresh_repadded: int = 0  # partitions re-padded by the last snapshot
     last_refresh_copied: int = 0  # partitions copied into the COW stack buffers
     snapshot_buffers: int = 0     # COW stacked buffers pooled (leased + free)
+    # -- mixed precision (config.recall_target) ------------------------------
+    value_format_histogram: dict = dataclasses.field(default_factory=dict)
+    value_bytes_per_nnz: float = 0.0  # streamed value bytes / live nnz
+    recall_target: Optional[float] = None
+    predicted_recall: Optional[float] = None  # calibration's recall@k estimate
 
 
 class SparseEmbeddingIndex:
@@ -51,9 +56,15 @@ class SparseEmbeddingIndex:
         csr: bscsr_lib.CSRMatrix,
         config: Optional[topk_lib.TopKSpMVConfig] = None,
         nnz_per_row: int = 32,
+        recall_target: Optional[float] = None,
     ):
         self.csr = csr  # the collection the index was built from (base segment)
-        self.config = config or topk_lib.TopKSpMVConfig()
+        config = config or topk_lib.TopKSpMVConfig()
+        if recall_target is not None:
+            # Convenience knob: per-partition mixed-precision streams tuned
+            # so predicted recall@k vs exact stays >= the target.
+            config = dataclasses.replace(config, recall_target=recall_target)
+        self.config = config
         self.nnz_per_row = nnz_per_row  # sparsification level for dense upserts
         self.index = topk_lib.MutableTopKSpMVIndex(csr, self.config)
 
@@ -63,10 +74,12 @@ class SparseEmbeddingIndex:
         embeddings: np.ndarray,
         nnz_per_row: int = 32,
         config: Optional[topk_lib.TopKSpMVConfig] = None,
+        recall_target: Optional[float] = None,
     ) -> "SparseEmbeddingIndex":
         """Sparsify dense embeddings (magnitude top-m) and index them."""
         csr = bscsr_lib.sparsify_topm(embeddings, nnz_per_row)
-        return cls(csr, config, nnz_per_row=nnz_per_row)
+        return cls(csr, config, nnz_per_row=nnz_per_row,
+                   recall_target=recall_target)
 
     def query(
         self, x: np.ndarray, use_kernel: bool = True
@@ -171,6 +184,10 @@ class SparseEmbeddingIndex:
             last_refresh_repadded=self.index.last_refresh_repadded,
             last_refresh_copied=self.index.last_refresh_copied,
             snapshot_buffers=self.index.snapshot_buffers,
+            value_format_histogram=packed.format_histogram(),
+            value_bytes_per_nnz=packed.value_bytes_per_nnz,
+            recall_target=self.config.recall_target,
+            predicted_recall=self.index.predicted_recall,
         )
 
     def dispatch_info(self) -> dict:

@@ -19,10 +19,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import adaptive as adaptive_lib
 from repro.core import bscsr as bscsr_lib
 from repro.core import partition as partition_lib
 from repro.core.precision_model import expected_precision, min_partitions_for_precision
-from repro.core.quantization import FORMATS
+from repro.core.quantization import F32, FORMATS, width_class_of
 from repro.kernels import executor as executor_lib
 from repro.kernels import ops as kernel_ops
 from repro.kernels import ref as ref_lib
@@ -47,7 +48,14 @@ class TopKSpMVConfig:
     num_partitions: Optional[int] = None   # c; None -> auto from precision target
     precision_target: float = 0.99
     block_size: int = 256          # B (nnz per tile-packet)
-    value_format: str = "F32"      # F32 | BF16 | Q15 | Q7
+    value_format: str = "F32"      # F32 | BF16 | Q15 | Q7 (uniform)
+    recall_target: Optional[float] = None  # per-partition mixed precision:
+                                   # autotune one ValueFormat per partition so
+                                   # predicted quantization-induced recall@k
+                                   # vs exact stays >= this target (overrides
+                                   # value_format; see core/adaptive.py)
+    calibration_queries: int = 16  # query sample size for the autotuner
+    calibration_seed: int = 0      # deterministic per (seed, collection)
     packets_per_step: int = 2      # T
     gather_mode: str = "auto"      # take | onehot | auto (per-backend microbench)
     inner_loop: str = "linear"     # linear | legacy (+ mixed, for parity tests)
@@ -90,6 +98,7 @@ class TopKSpMVIndex:
 
     packed: kernel_ops.PackedPartitions
     config: TopKSpMVConfig
+    format_plan: Optional[adaptive_lib.PartitionFormatPlan] = None
 
     @property
     def n_rows(self) -> int:
@@ -104,6 +113,14 @@ class TopKSpMVIndex:
 
 def build_index(csr: bscsr_lib.CSRMatrix, config: TopKSpMVConfig) -> TopKSpMVIndex:
     c = config.resolve_partitions(csr.shape[0])
+    fmt_plan = None
+    value_formats = None
+    if config.recall_target is not None:
+        fmt_plan, _ = adaptive_lib.assign_partition_formats(
+            csr, c, config.recall_target, k=config.k,
+            n_queries=config.calibration_queries, seed=config.calibration_seed,
+        )
+        value_formats = fmt_plan.formats
     packed = kernel_ops.pack_partitions(
         csr,
         num_partitions=c,
@@ -111,8 +128,9 @@ def build_index(csr: bscsr_lib.CSRMatrix, config: TopKSpMVConfig) -> TopKSpMVInd
         value_format=config.value_format,
         packets_multiple=config.packets_per_step,
         stream_layout=config.stream_layout,
+        value_formats=value_formats,
     )
-    return TopKSpMVIndex(packed=packed, config=config)
+    return TopKSpMVIndex(packed=packed, config=config, format_plan=fmt_plan)
 
 
 class MutableTopKSpMVIndex:
@@ -165,9 +183,42 @@ class MutableTopKSpMVIndex:
         c = config.resolve_partitions(csr.shape[0])
         self._plan = partition_lib.PartitionPlan.build(csr.shape[0], c)
         parts = partition_lib.partition_csr(csr, self._plan)
-        self._streams = [
-            bscsr_lib.encode_bscsr(p, config.block_size, self._fmt) for p in parts
-        ]
+        # Mixed-precision plane (config.recall_target): three aligned stream
+        # copies per partition — ``_exact`` (F32, the structural + numeric
+        # source of truth), ``_native`` (the partition's assigned format,
+        # what the tagged fused groups actually stream) and ``_streams``
+        # (= dequantize(_native), the f32 twins the split/reference plane and
+        # the existing pad/stack machinery consume).  All three share one
+        # flags/cols structure, so slot bookkeeping is format-oblivious.
+        self._part_fmts: Optional[list] = None
+        self._calib: Optional[adaptive_lib.PrecisionCalibration] = None
+        self._exact: Optional[list] = None
+        self._native: Optional[list] = None
+        self.last_refresh_promoted = 0
+        if config.recall_target is not None:
+            fmt_plan, calib = adaptive_lib.assign_partition_formats(
+                csr, c, config.recall_target, k=config.k,
+                n_queries=config.calibration_queries,
+                seed=config.calibration_seed,
+            )
+            self._part_fmts = list(fmt_plan.formats)
+            self._calib = calib
+            self._fmt = F32  # the split twin plane is uniformly f32
+            self._exact = [
+                bscsr_lib.encode_bscsr(p, config.block_size, F32) for p in parts
+            ]
+            self._native = [
+                bscsr_lib.requantize_stream(e, FORMATS[f])
+                for e, f in zip(self._exact, self._part_fmts)
+            ]
+            self._streams = [
+                bscsr_lib.dequantize_stream(n) for n in self._native
+            ]
+        else:
+            self._streams = [
+                bscsr_lib.encode_bscsr(p, config.block_size, self._fmt)
+                for p in parts
+            ]
         self._base_packets = max(e.num_packets for e in self._streams)
         self._slots = [
             list(range(start, start + size))
@@ -209,12 +260,18 @@ class MutableTopKSpMVIndex:
         """Invalidate the per-partition padded-stream (+ fused words) cache."""
         c = len(self._streams)
         self._dirty = set(range(c))
+        self._mutated = set()  # content-mutated since the last refresh
         self._padded_streams = [None] * c
         self._padded_words = [None] * c
         self._padded_max_p = -1
         # Churn-stable packet cap: re-anchored at the exact (step-aligned)
         # count on build/compact, bumped to pow2 buckets by growth.
         self._packet_cap = -1
+        # Mixed-precision plane: per-width-class packet caps (same
+        # anchor-then-bucket discipline, one cap per TAG class) and the
+        # per-partition padded tagged-word cache: ci -> (cap, fmt, words).
+        self._class_caps: Optional[dict] = None
+        self._padded_tagged = [None] * c
         # All partitions' content is new: stamp them past every COW buffer.
         self._stamp_counter += 1
         self._part_stamps = np.full(c, self._stamp_counter, np.int64)
@@ -222,6 +279,7 @@ class MutableTopKSpMVIndex:
     def _mark_dirty(self, ci: int) -> None:
         """Record that partition ``ci``'s stream content changed."""
         self._dirty.add(ci)
+        self._mutated.add(ci)
         self._stamp_counter += 1
         self._part_stamps[ci] = self._stamp_counter
 
@@ -246,8 +304,37 @@ class MutableTopKSpMVIndex:
         compiled query fns are reused with ZERO retraces until a bucket
         doubles (docs/ARCHITECTURE.md, "where does a query retrace?").
         """
-        fused = self.config.stream_layout == "fused"
+        hetero = self._part_fmts is not None
+        # Mixed-precision snapshots never carry uniform fused words — their
+        # fused dispatch plane is the per-width-class tagged groups below.
+        fused = self.config.stream_layout == "fused" and not hetero
         mult = self.config.packets_per_step
+        # Promote-only format hysteresis: re-score mutated partitions against
+        # the stored calibration; promote the worst offenders up the byte
+        # ladder only if the recall budget is breached.  Benign upserts keep
+        # the format vector — and the executor signature — bit-stable;
+        # demotions wait for the full re-assignment at compact().
+        self.last_refresh_promoted = 0
+        if hetero and self._mutated and self._calib is not None:
+            mutated = {
+                ci: self._partition_live_csr(ci) for ci in sorted(self._mutated)
+            }
+            new_fmts, promoted = adaptive_lib.refresh_partition_formats(
+                self._part_fmts, self._calib, mutated
+            )
+            for ci, (old, new) in enumerate(zip(self._part_fmts, new_fmts)):
+                if old != new:
+                    # Structure-preserving re-quantization from the exact
+                    # plane: slots, deltas and flags stay untouched.
+                    self._native[ci] = bscsr_lib.requantize_stream(
+                        self._exact[ci], FORMATS[new]
+                    )
+                    self._streams[ci] = bscsr_lib.dequantize_stream(
+                        self._native[ci]
+                    )
+            self._part_fmts = list(new_fmts)
+            self.last_refresh_promoted = promoted
+        self._mutated = set()
         max_p = max(e.num_packets for e in self._streams)
         max_p = max(-(-max_p // mult) * mult, mult)
         if self.config.churn_stable:
@@ -285,6 +372,57 @@ class MutableTopKSpMVIndex:
         self.last_refresh_repadded = len(dirty)
         self.total_repadded += len(dirty)
 
+        # Mixed-precision plane: per-width-class tagged fused groups.  Each
+        # class pads to its OWN packet cap (anchor-then-bucket, like
+        # ``_packet_cap``) so narrow partitions never inherit the widest
+        # class's packet count; only dirty / cap-shifted / format-flipped
+        # partitions re-fuse (the per-class np.stack itself is O(class
+        # bytes) — the COW pool does not yet cover the group plane).
+        groups = None
+        fmt_codes = None
+        if hetero:
+            nat: dict = {}
+            for n in self._native:
+                cname = width_class_of(n.value_format).name
+                p = max(-(-n.num_packets // mult) * mult, mult)
+                nat[cname] = max(nat.get(cname, 0), p)
+            if self.config.churn_stable:
+                if self._class_caps is None:
+                    self._class_caps = dict(nat)      # anchor refresh: exact
+                else:                                 # mutation refresh: bucket
+                    for cname, p in nat.items():
+                        self._class_caps[cname] = max(
+                            self._class_caps.get(cname, 0),
+                            kernel_ops.bucket_packets(p, mult),
+                        )
+                caps = self._class_caps
+            else:
+                caps = nat
+            by_class: dict = {}
+            for ci, n in enumerate(self._native):
+                cname = width_class_of(n.value_format).name
+                cap = caps[cname]
+                cached = self._padded_tagged[ci]
+                if (ci in dirty or cached is None or cached[0] != cap
+                        or cached[1] != n.value_format.name):
+                    words = bscsr_lib.fuse_stream(
+                        bscsr_lib.pad_packets(n, cap), tagged=True
+                    )
+                    self._padded_tagged[ci] = (cap, n.value_format.name, words)
+                by_class.setdefault(cname, []).append(ci)
+            groups = tuple(
+                kernel_ops.StreamGroup(
+                    cname,
+                    tuple(cores),
+                    np.stack([self._padded_tagged[ci][2] for ci in cores]),
+                    self._streams[0].block_size,
+                )
+                for cname, cores in sorted(by_class.items())
+            )
+            fmt_codes = np.array(
+                [FORMATS[f].code for f in self._part_fmts], np.int32
+            )
+
         num_slots = np.array([len(s) for s in self._slots], dtype=np.int32)
         width = max(int(num_slots.max()) if num_slots.size else 0, 1)
         tomb_len = max(self._next_gid, 1)
@@ -317,6 +455,8 @@ class MutableTopKSpMVIndex:
             delta_nnz=self._delta_nnz,
             dead_nnz=self._dead_nnz,
             tombstone_count=self._tombstone_slots,
+            fmt_codes=fmt_codes,
+            groups=groups,
         )
         if self.config.cow_snapshots:
             buf, copied = self._buffer_pool.lease(
@@ -392,6 +532,34 @@ class MutableTopKSpMVIndex:
             max(self.n_rows, 1), self.num_cores, self.config.k, self.config.big_k
         )
 
+    @property
+    def partition_formats(self) -> Optional[Tuple[str, ...]]:
+        """Current per-partition ValueFormat names (None when homogeneous)."""
+        return tuple(self._part_fmts) if self._part_fmts is not None else None
+
+    @property
+    def predicted_recall(self) -> Optional[float]:
+        """The calibration's predicted recall@k at the current assignment."""
+        return (
+            self._calib.predicted_recall() if self._calib is not None else None
+        )
+
+    def _partition_live_csr(self, ci: int) -> bscsr_lib.CSRMatrix:
+        """Live rows currently owned by partition ``ci``, as a host CSR."""
+        gids = [g for g in self._slots[ci] if g != int(bscsr_lib.INVALID_ROW)]
+        lens = np.asarray([len(self._rows[g][0]) for g in gids], np.int64)
+        indptr = np.concatenate([[0], np.cumsum(lens)]).astype(np.int64)
+        if gids:
+            indices = np.concatenate([self._rows[g][0] for g in gids])
+            data = np.concatenate([self._rows[g][1] for g in gids])
+        else:
+            indices = np.zeros(0, np.int32)
+            data = np.zeros(0, np.float32)
+        return bscsr_lib.CSRMatrix(
+            indptr=indptr, indices=indices, data=data,
+            shape=(len(gids), self._n_cols),
+        )
+
     # -- mutation ------------------------------------------------------------
 
     @staticmethod
@@ -416,7 +584,26 @@ class MutableTopKSpMVIndex:
             delta = bscsr_lib.encode_delta_rows(
                 rows, self._n_cols, self.config.block_size, self._fmt
             )
-            self._streams[ci] = bscsr_lib.append_packets(self._streams[ci], delta)
+            if self._part_fmts is not None:
+                # Keep all three planes append-aligned: the delta encodes
+                # exactly (F32) once, then re-quantizes into the partition's
+                # current format — structure identical across planes.
+                fmt = FORMATS[self._part_fmts[ci]]
+                self._exact[ci] = bscsr_lib.append_packets(
+                    self._exact[ci], delta
+                )
+                native_delta = bscsr_lib.requantize_stream(delta, fmt)
+                self._native[ci] = bscsr_lib.append_packets(
+                    self._native[ci], native_delta
+                )
+                self._streams[ci] = bscsr_lib.append_packets(
+                    self._streams[ci],
+                    bscsr_lib.dequantize_stream(native_delta),
+                )
+            else:
+                self._streams[ci] = bscsr_lib.append_packets(
+                    self._streams[ci], delta
+                )
             self._mark_dirty(ci)
             slots = self._slots[ci]
             # The previously-open sentinel becomes a dead candidate slot.
@@ -550,6 +737,24 @@ class MutableTopKSpMVIndex:
         else:
             streams = [encode(p) for p in parts]
         self.last_compact_parallel = parallel
+        if self._part_fmts is not None:
+            # Full re-assignment (the only place formats may DEMOTE): fresh
+            # calibration over the live collection, then rebuild the
+            # exact/native/twin planes.  ``self._fmt`` is F32 here, so the
+            # parallel-encoded ``streams`` already are the exact plane.
+            fmt_plan, calib = adaptive_lib.assign_partition_formats(
+                csr, plan.num_partitions, self.config.recall_target,
+                k=self.config.k, n_queries=self.config.calibration_queries,
+                seed=self.config.calibration_seed,
+            )
+            self._part_fmts = list(fmt_plan.formats)
+            self._calib = calib
+            self._exact = streams
+            self._native = [
+                bscsr_lib.requantize_stream(e, FORMATS[f])
+                for e, f in zip(self._exact, self._part_fmts)
+            ]
+            streams = [bscsr_lib.dequantize_stream(n) for n in self._native]
         self._streams = streams
         self._base_packets = max(e.num_packets for e in streams)
         self._plan = plan
@@ -690,7 +895,11 @@ def distributed_topk_spmv_fn(
     replicated = NamedSharding(mesh, P())
 
     # One fused word stream per core, or the legacy three split streams.
-    if packed.stream_layout == "fused":
+    # Mixed-precision snapshots ship their f32 split twins: the per-class
+    # tagged groups are ragged across cores, which a core-sharded mesh
+    # layout cannot carry (single-device dispatch streams them natively).
+    layout = "split" if packed.is_heterogeneous else packed.stream_layout
+    if layout == "fused":
         host_arrays = (packed.fused_words(),)
     else:
         host_arrays = (packed.vals, packed.cols, packed.flags)
@@ -727,7 +936,7 @@ def distributed_topk_spmv_fn(
             packets_per_step=cfg.packets_per_step,
             fmt_name=packed.value_format.name,
             inner_loop=cfg.inner_loop,
-            stream_layout=packed.stream_layout,
+            stream_layout=layout,
             block_size=packed.block_size,
             interpret=interpret,
             **kwargs,

@@ -103,7 +103,11 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.quantization import FORMATS, ValueFormat
+from repro.core.quantization import (
+    STREAM_FORMATS,
+    TaggedFormatClass,
+    ValueFormat,
+)
 
 NEG_INF = float(np.finfo(np.float32).min)
 FLAG_WORD_BITS = 32
@@ -129,8 +133,23 @@ def _unpack_flags_tile(words: jnp.ndarray, tb: int) -> jnp.ndarray:
     return bits.reshape(tb).astype(jnp.int32)
 
 
+def _decode_val_words(vw, fmt: ValueFormat, tb: int):
+    """One value section's int32 words -> (tb,) f32, per storage dtype."""
+    if fmt.storage_dtype == "float32":
+        return jax.lax.bitcast_convert_type(vw, jnp.float32)
+    if fmt.storage_dtype == "bfloat16":
+        v = jax.lax.bitcast_convert_type(vw, jnp.bfloat16).reshape(tb)
+        return v.astype(jnp.float32)
+    if fmt.storage_dtype == "int16":
+        v = jax.lax.bitcast_convert_type(vw, jnp.int16).reshape(tb)
+        return v.astype(jnp.float32) * jnp.float32(fmt.scale)
+    # int8: four lanes per word
+    v = jax.lax.bitcast_convert_type(vw, jnp.int8).reshape(tb)
+    return v.astype(jnp.float32) * jnp.float32(fmt.scale)
+
+
 def _decode_fused_tile(
-    words, block: int, fmt: ValueFormat, col_words: int
+    words, block: int, fmt, col_words: int
 ):
     """Bit-exact decode of one fused tile ref: (1, T, W) -> (flag words, c, v).
 
@@ -143,32 +162,42 @@ def _decode_fused_tile(
     fallback if a backend lacks narrow bitcasts).  Returns the packed flag
     words (T, B/32) plus int32 cols and f32 values of length T*B —
     bit-identical to reading the split arrays.
+
+    ``fmt`` may be a :class:`TaggedFormatClass` (mixed-precision snapshots):
+    the packet rows then lead with one header word carrying the partition's
+    format code, sections shift right by one word, and — where the class has
+    several members sharing a storage width (BF16 vs Q15 in the 2-byte
+    class) — the value section is decoded each way and the header tag
+    selects per core at run time.
     """
     t = words.shape[1]
     tb = t * block
     wf = block // FLAG_WORD_BITS
+    tagged = isinstance(fmt, TaggedFormatClass)
+    h = 1 if tagged else 0
     # Static sub-range loads of the one streamed block ref (no full-block
     # materialize + copy-slices: each section is read exactly once).
-    flag_words = words[0, :, :wf]
-    cw = words[0, :, wf : wf + col_words].reshape(-1)
-    vw = words[0, :, wf + col_words :].reshape(-1)
+    flag_words = words[0, :, h : h + wf]
+    cw = words[0, :, h + wf : h + wf + col_words].reshape(-1)
+    vw = words[0, :, h + wf + col_words :].reshape(-1)
 
     if col_words == block:                       # int32 col ids: words verbatim
         c = cw
     else:   # int16 pairs (ids < 2**15; the gather consumes int16 directly)
         c = jax.lax.bitcast_convert_type(cw, jnp.int16).reshape(tb)
 
-    if fmt.storage_dtype == "float32":
-        v = jax.lax.bitcast_convert_type(vw, jnp.float32)
-    elif fmt.storage_dtype == "bfloat16":
-        v = jax.lax.bitcast_convert_type(vw, jnp.bfloat16).reshape(tb)
-        v = v.astype(jnp.float32)
-    elif fmt.storage_dtype == "int16":
-        v = jax.lax.bitcast_convert_type(vw, jnp.int16).reshape(tb)
-        v = v.astype(jnp.float32) * jnp.float32(fmt.scale)
-    else:                                        # int8: four lanes per word
-        v = jax.lax.bitcast_convert_type(vw, jnp.int8).reshape(tb)
-        v = v.astype(jnp.float32) * jnp.float32(fmt.scale)
+    if not tagged:
+        return flag_words, c, _decode_val_words(vw, fmt, tb)
+
+    members = fmt.member_formats
+    if len(members) == 1:
+        return flag_words, c, _decode_val_words(vw, members[0], tb)
+    # Shared-width class: the header tag is load-bearing — decode the value
+    # words under every member format and let the core's tag pick one.
+    tag = words[0, 0, 0]
+    v = _decode_val_words(vw, members[0], tb)
+    for m in members[1:]:
+        v = jnp.where(tag == m.code, _decode_val_words(vw, m, tb), v)
     return flag_words, c, v
 
 
@@ -351,11 +380,15 @@ def _topk_spmv_kernel(
         topr_ref[...] = acc_r[...].reshape(1, k)
 
 
-def _fused_geometry(width: int, block: int, fmt: ValueFormat) -> int:
-    """Validate a fused stream width and return its col-section word count."""
+def _fused_geometry(width: int, block: int, fmt) -> int:
+    """Validate a fused stream width and return its col-section word count.
+
+    Tagged classes budget one extra header word per packet row.
+    """
     wf = block // FLAG_WORD_BITS
     wv = block * int(fmt.bytes_per_value) // 4
-    col_words = width - wf - wv
+    header = 1 if isinstance(fmt, TaggedFormatClass) else 0
+    col_words = width - header - wf - wv
     if col_words not in (block // 2, block):
         raise ValueError(
             f"fused stream width {width} inconsistent with block={block}, "
@@ -406,8 +439,16 @@ def bscsr_topk_spmv(
     With ``stream_layout="fused"`` pass the ``bscsr.fuse_stream`` word array
     as ``vals`` (``cols``/``flags`` stay ``None``): each grid step then
     pipelines ONE contiguous block instead of three.
+
+    ``fmt_name`` may also name a tagged width class (``TAG4``/``TAG2``/
+    ``TAG1``) for one group of a mixed-precision snapshot — fused layout
+    only, since the per-packet header tag lives in the fused word stream.
     """
-    fmt = FORMATS[fmt_name]
+    fmt = STREAM_FORMATS[fmt_name]
+    if isinstance(fmt, TaggedFormatClass) and stream_layout != "fused":
+        raise ValueError(
+            f"tagged format class {fmt_name!r} requires stream_layout='fused'"
+        )
     n_cores, n_packets, last = vals.shape
     if stream_layout == "fused":
         if block_size is None:
@@ -590,7 +631,11 @@ def bscsr_topk_spmv_multiquery(
     interpret: bool = True,
 ):
     """Multi-query kernel; returns per-core (vals, rows) of shape (C, Q, k)."""
-    fmt = FORMATS[fmt_name]
+    fmt = STREAM_FORMATS[fmt_name]
+    if isinstance(fmt, TaggedFormatClass) and stream_layout != "fused":
+        raise ValueError(
+            f"tagged format class {fmt_name!r} requires stream_layout='fused'"
+        )
     n_cores, n_packets, last = vals.shape
     if stream_layout == "fused":
         if block_size is None:

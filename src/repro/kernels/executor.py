@@ -97,14 +97,24 @@ class DeviceSnapshot:
         "uid", "stream_layout", "streams", "row_starts", "rows_per_part",
         "slot_to_row", "tombstones", "args", "signature", "max_slots",
         "n_rows_logical", "n_rows_sentinel", "block_size", "fmt_name",
+        "groups_meta", "num_cores",
     )
 
     def __init__(self, packed: ops.PackedPartitions, stream_layout: str):
         self.uid = packed.uid
         self.stream_layout = stream_layout
+        # Mixed-precision snapshots pin one tagged word array PER width
+        # class; ``groups_meta`` (class name + core indices, static) tells
+        # the compiled fn how to dispatch and scatter them.
+        self.groups_meta = None
         # jnp.array (copy=True): device buffers must not alias host COW
         # buffers that a later refresh may recycle.
-        if stream_layout == "fused":
+        if stream_layout == "fused" and packed.groups is not None:
+            self.streams = tuple(jnp.array(g.words) for g in packed.groups)
+            self.groups_meta = tuple(
+                (g.class_name, g.cores) for g in packed.groups
+            )
+        elif stream_layout == "fused":
             self.streams = (jnp.array(packed.fused_words()),)
         else:
             self.streams = (
@@ -112,6 +122,7 @@ class DeviceSnapshot:
                 jnp.array(packed.cols),
                 jnp.array(packed.flags),
             )
+        self.num_cores = packed.num_cores
         self.row_starts = jnp.array(packed.row_starts)
         self.rows_per_part = jnp.array(packed.candidate_slots)
         self.slot_to_row = (
@@ -149,6 +160,13 @@ class DeviceSnapshot:
             self.tombstones is not None,
             self.max_slots, self.block_size,
             self.fmt_name,
+            # Mixed precision: the per-partition format-code vector and the
+            # width-class grouping are part of the compiled signature — a
+            # format reassignment is a REAL retrace and the ``retraces``
+            # counter must see it, while an unchanged assignment reuses the
+            # compiled fn bit-for-bit across upsert->query cycles.
+            packed.fmt_signature,
+            self.groups_meta,
         )
 
 
@@ -403,19 +421,58 @@ class QueryExecutor:
             if q is None:
                 kwargs["gather_mode"] = self.gather_mode
 
-            def run(x, *arrs):
-                streams, row_starts, rows_per, n_rows, slot, tombs = (
-                    split_args(arrs)
-                )
-                lv, lr = kernel(jnp.asarray(x, jnp.float32), *streams, **kwargs)
-                finalize = (
-                    ops.finalize_candidates if q is None
-                    else ops.finalize_candidates_batched
-                )
-                return finalize(
-                    lv, lr, row_starts, rows_per, big_k, n_rows,
-                    slot_to_row=slot, tombstones=tombs,
-                )
+            if snap.groups_meta is not None:
+                # Mixed precision: one kernel call per width class over its
+                # tagged word array, candidates scattered back to (C,[Q,]k)
+                # core order before the shared finalize.  Class names and
+                # core index vectors are static (baked into the trace).
+                num_cores = snap.num_cores
+
+                def run(x, *arrs):
+                    streams, row_starts, rows_per, n_rows, slot, tombs = (
+                        split_args(arrs)
+                    )
+                    xq = jnp.asarray(x, jnp.float32)
+                    shape = (
+                        (num_cores, k) if q is None else (num_cores, q, k)
+                    )
+                    lv = jnp.full(shape, ops.NEG_INF, jnp.float32)
+                    lr = jnp.full(shape, max_slots, jnp.int32)
+                    for (cname, cores), words in zip(
+                        snap.groups_meta, streams
+                    ):
+                        gv, gr = kernel(
+                            xq, words, **dict(kwargs, fmt_name=cname)
+                        )
+                        idx = jnp.asarray(list(cores), jnp.int32)
+                        lv = lv.at[idx].set(gv)
+                        lr = lr.at[idx].set(gr)
+                    finalize = (
+                        ops.finalize_candidates if q is None
+                        else ops.finalize_candidates_batched
+                    )
+                    return finalize(
+                        lv, lr, row_starts, rows_per, big_k, n_rows,
+                        slot_to_row=slot, tombstones=tombs,
+                    )
+
+            else:
+
+                def run(x, *arrs):
+                    streams, row_starts, rows_per, n_rows, slot, tombs = (
+                        split_args(arrs)
+                    )
+                    lv, lr = kernel(
+                        jnp.asarray(x, jnp.float32), *streams, **kwargs
+                    )
+                    finalize = (
+                        ops.finalize_candidates if q is None
+                        else ops.finalize_candidates_batched
+                    )
+                    return finalize(
+                        lv, lr, row_starts, rows_per, big_k, n_rows,
+                        slot_to_row=slot, tombstones=tombs,
+                    )
 
         else:
             raise ValueError(f"path must be 'kernel' or 'reference', got {path!r}")

@@ -65,7 +65,13 @@ import numpy as np
 
 from repro.core import bscsr as bscsr_lib
 from repro.core import partition as partition_lib
-from repro.core.quantization import FORMATS, ValueFormat
+from repro.core.quantization import (
+    FORMAT_BY_CODE,
+    FORMATS,
+    WIDTH_CLASSES,
+    ValueFormat,
+    width_class_of,
+)
 from repro.kernels import ref as ref_lib
 from repro.kernels.bscsr_topk_spmv import bscsr_topk_spmv, bscsr_topk_spmv_multiquery
 
@@ -104,6 +110,36 @@ _SNAPSHOT_UIDS = itertools.count()
 
 
 @dataclasses.dataclass(frozen=True)
+class StreamGroup:
+    """One storage-width class of a mixed-precision snapshot's fused streams.
+
+    Heterogeneous snapshots cannot stream one rectangular fused array — a
+    uniform word width would pad every partition to the widest format and
+    erase the byte savings.  Instead partitions are grouped by value storage
+    width (``TAG4``/``TAG2``/``TAG1``); each group keeps its own tagged
+    ``(Cg, Pg, Wg)`` word array with an independent packet bucket, and the
+    dispatchers run one kernel call per group, scattering the per-core
+    candidates back into ``(C, k)`` by ``cores``.
+    """
+
+    class_name: str               # WIDTH_CLASSES key (TAG4 | TAG2 | TAG1)
+    cores: Tuple[int, ...]        # snapshot core indices in this group
+    words: np.ndarray             # (Cg, Pg, 1 + W) tagged fused word streams
+    block_size: int
+
+    @property
+    def stream_bytes(self) -> int:
+        return int(self.words.nbytes)
+
+    @property
+    def value_stream_bytes(self) -> int:
+        """Bytes of this group's value sections (padding packets included)."""
+        cg, pg, _ = self.words.shape
+        bpv = WIDTH_CLASSES[self.class_name].bytes_per_value
+        return cg * pg * self.block_size * bpv
+
+
+@dataclasses.dataclass(frozen=True)
 class PackedPartitions:
     """All core partitions of one matrix, stacked for the (cores, steps) grid.
 
@@ -113,6 +149,13 @@ class PackedPartitions:
     Each instance gets a fresh ``uid`` (including via ``dataclasses.replace``)
     and a ``has_tombstones`` bit computed ONCE here — per-dispatch code must
     never re-scan the tombstone bitmap.
+
+    Mixed-precision snapshots additionally carry ``fmt_codes`` (the
+    per-partition :class:`ValueFormat` code vector) and ``groups`` (tagged
+    fused streams per storage-width class).  Their split ``vals`` are the
+    exactly-dequantized F32 twins (``bscsr.dequantize_stream``) so the
+    reference oracle and the split-layout parity path read one uniform
+    dtype; byte accounting uses the native group words instead.
     """
 
     vals: np.ndarray          # (C, P, B) base+delta concatenated streams
@@ -134,6 +177,9 @@ class PackedPartitions:
     delta_nnz: int = 0                         # live nnz held in delta segments
     dead_nnz: int = 0                          # stream nnz under retired slots
     tombstone_count: int = 0                   # retired (tombstoned) slots
+    # --- mixed-precision fields (None for a homogeneous snapshot) ---
+    fmt_codes: Optional[np.ndarray] = None     # (C,) int32 per-partition codes
+    groups: Optional[Tuple[StreamGroup, ...]] = None  # tagged fused streams
     # init=False: always derived in __post_init__, never copied stale through
     # dataclasses.replace.
     uid: int = dataclasses.field(init=False, compare=False, repr=False,
@@ -198,16 +244,64 @@ class PackedPartitions:
         return self.delta_nnz / max(self.nnz, 1)
 
     @property
+    def is_heterogeneous(self) -> bool:
+        """True when partitions carry per-partition value formats."""
+        return self.fmt_codes is not None
+
+    @property
+    def fmt_signature(self) -> Optional[Tuple[int, ...]]:
+        """Per-partition format-code tuple keying compiled signatures.
+
+        ``None`` for homogeneous snapshots (whose single ``fmt_name`` is
+        already part of the executor signature); for mixed-precision
+        snapshots a reassignment changes this tuple and therefore the
+        signature — the executor's retrace counter sees format churn.
+        """
+        if self.fmt_codes is None:
+            return None
+        return tuple(int(c) for c in self.fmt_codes)
+
+    def format_histogram(self) -> dict:
+        """{format name: partition count} of the served streams."""
+        if self.fmt_codes is None:
+            return {self.value_format.name: self.num_cores}
+        out: dict = {}
+        for c in self.fmt_codes:
+            name = FORMAT_BY_CODE[int(c)].name
+            out[name] = out.get(name, 0) + 1
+        return out
+
+    @property
     def stream_bytes(self) -> int:
+        if self.groups is not None:  # native tagged words, not the f32 twins
+            return int(sum(g.stream_bytes for g in self.groups))
         return self.vals.nbytes + self.cols.nbytes + self.flags.nbytes
+
+    @property
+    def value_stream_bytes(self) -> int:
+        """Bytes of the streamed value sections alone (padding included)."""
+        if self.groups is not None:
+            return int(sum(g.value_stream_bytes for g in self.groups))
+        c, p, _ = self.vals.shape
+        return c * p * self.block_size * int(self.value_format.bytes_per_value)
 
     @property
     def bytes_per_nnz(self) -> float:
         """Effective bytes streamed per *live* nnz (grows with delta/dead mass)."""
         return self.stream_bytes / max(self.nnz, 1)
 
+    @property
+    def value_bytes_per_nnz(self) -> float:
+        """Value-section bytes per live nnz — the mixed-precision win metric."""
+        return self.value_stream_bytes / max(self.nnz, 1)
+
     def fused_words(self) -> np.ndarray:
         """The (C, P, W) fused word streams; derived on the fly if not carried."""
+        if self.groups is not None:
+            raise ValueError(
+                "mixed-precision snapshot has no single fused array — "
+                "dispatch its StreamGroups (fused) or its f32 split arrays"
+            )
         if self.words is not None:
             return self.words
         return bscsr_lib.fuse_words(self.vals, self.cols, self.flags)
@@ -236,6 +330,7 @@ class PackedPartitions:
                 else 0
             ),
             "rows_live": self.n_rows_logical,
+            "value_formats": self.format_histogram(),
         }
 
 
@@ -261,7 +356,9 @@ def stack_padded_streams(
             f"got {stream_layout!r}"
         )
     words_arr = None
-    if stream_layout == "fused":
+    if stream_layout == "fused" and segment_fields.get("groups") is None:
+        # Mixed-precision snapshots never fuse their f32 twins: the fused
+        # dispatch plane is the per-width-class tagged ``groups`` instead.
         if words is None:
             words = [bscsr_lib.fuse_stream(e) for e in padded]
         words_arr = np.stack(list(words))
@@ -304,6 +401,42 @@ def stack_streams(
     )
 
 
+def build_stream_groups(
+    encoded: Sequence[bscsr_lib.BSCSRMatrix],
+    packets_multiple: int = 2,
+    pad_to: Optional[dict] = None,
+) -> Tuple[StreamGroup, ...]:
+    """Group native-format partition streams by storage width and fuse (tagged).
+
+    Each width class pads to its OWN step-aligned packet bucket — a narrow
+    group never inherits the widest partition's packet count, which is where
+    the mixed-precision byte savings become real.  ``pad_to`` optionally
+    pins per-class packet counts (churn-stable mutable indexes pass their
+    bucketed caps); classes absent from it use their natural maximum.
+    """
+    by_class: dict = {}
+    for ci, e in enumerate(encoded):
+        by_class.setdefault(width_class_of(e.value_format).name, []).append(ci)
+    groups = []
+    for cname in sorted(by_class):
+        cores = by_class[cname]
+        max_p = max(encoded[ci].num_packets for ci in cores)
+        max_p = max(-(-max_p // packets_multiple) * packets_multiple,
+                    packets_multiple)
+        if pad_to is not None and cname in pad_to:
+            max_p = max(max_p, int(pad_to[cname]))
+        words = np.stack([
+            bscsr_lib.fuse_stream(
+                bscsr_lib.pad_packets(encoded[ci], max_p), tagged=True
+            )
+            for ci in cores
+        ])
+        groups.append(
+            StreamGroup(cname, tuple(cores), words, encoded[0].block_size)
+        )
+    return tuple(groups)
+
+
 def pack_partitions(
     csr: bscsr_lib.CSRMatrix,
     num_partitions: int,
@@ -311,15 +444,40 @@ def pack_partitions(
     value_format: ValueFormat | str = "F32",
     packets_multiple: int = 2,
     stream_layout: str = "split",
+    value_formats: Optional[Sequence[ValueFormat | str]] = None,
 ) -> PackedPartitions:
-    """Partition a CSR row-wise (§III-A) and BS-CSR encode each partition."""
-    fmt = FORMATS[value_format] if isinstance(value_format, str) else value_format
+    """Partition a CSR row-wise (§III-A) and BS-CSR encode each partition.
+
+    ``value_formats`` (one entry per partition) builds a mixed-precision
+    snapshot instead: each partition is encoded in its own format, the
+    tagged fused streams are grouped by storage width, and the split arrays
+    are the exactly-dequantized f32 twins (reference / parity path).
+    """
     plan = partition_lib.PartitionPlan.build(csr.shape[0], num_partitions)
     parts = partition_lib.partition_csr(csr, plan)
-    encoded = [bscsr_lib.encode_bscsr(p, block_size, fmt) for p in parts]
+    if value_formats is None:
+        fmt = FORMATS[value_format] if isinstance(value_format, str) else value_format
+        encoded = [bscsr_lib.encode_bscsr(p, block_size, fmt) for p in parts]
+        return stack_streams(
+            encoded, plan, csr.shape[1], csr.nnz,
+            packets_multiple=packets_multiple, stream_layout=stream_layout,
+        )
+    if len(value_formats) != len(parts):
+        raise ValueError(
+            f"value_formats has {len(value_formats)} entries for "
+            f"{len(parts)} partitions"
+        )
+    fmts = [FORMATS[f] if isinstance(f, str) else f for f in value_formats]
+    native = [
+        bscsr_lib.encode_bscsr(p, block_size, f) for p, f in zip(parts, fmts)
+    ]
+    groups = build_stream_groups(native, packets_multiple=packets_multiple)
     return stack_streams(
-        encoded, plan, csr.shape[1], csr.nnz, packets_multiple=packets_multiple,
-        stream_layout=stream_layout,
+        [bscsr_lib.dequantize_stream(e) for e in native],
+        plan, csr.shape[1], csr.nnz,
+        packets_multiple=packets_multiple, stream_layout=stream_layout,
+        fmt_codes=np.array([f.code for f in fmts], np.int32),
+        groups=groups,
     )
 
 
@@ -615,6 +773,50 @@ def _kernel_streams(packed: PackedPartitions, stream_layout: Optional[str]):
     )
 
 
+def _grouped_local_topk(
+    x: jnp.ndarray,
+    packed: PackedPartitions,
+    *,
+    k: int,
+    packets_per_step: int,
+    gather_mode: str,
+    inner_loop: str,
+    interpret: bool,
+    batched: bool,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mixed-precision fused dispatch: one kernel call per width class.
+
+    Each :class:`StreamGroup` streams its own tagged word array (narrow
+    groups stream narrow packets — the byte savings); the per-core
+    candidates are scattered back into the snapshot's ``(C, [Q,] k)`` order
+    before the shared finalize.  Every core belongs to exactly one group,
+    so the scatter fully overwrites the init sentinels.
+    """
+    c = packed.num_cores
+    shape = (c, x.shape[0], k) if batched else (c, k)
+    lv = jnp.full(shape, NEG_INF, jnp.float32)
+    lr = jnp.full(shape, packed.max_slots, jnp.int32)
+    for g in packed.groups:
+        common = dict(
+            k=k, n_rows=packed.max_slots, packets_per_step=packets_per_step,
+            fmt_name=g.class_name, inner_loop=inner_loop,
+            stream_layout="fused", block_size=packed.block_size,
+            interpret=interpret,
+        )
+        if batched:
+            gv, gr = bscsr_topk_spmv_multiquery(
+                x, jnp.asarray(g.words), **common
+            )
+        else:
+            gv, gr = bscsr_topk_spmv(
+                x, jnp.asarray(g.words), gather_mode=gather_mode, **common
+            )
+        cores = jnp.asarray(np.asarray(g.cores, np.int32))
+        lv = lv.at[cores].set(gv)
+        lr = lr.at[cores].set(gr)
+    return lv, lr
+
+
 def topk_spmv_blocked(
     x: jnp.ndarray,
     packed: PackedPartitions,
@@ -627,6 +829,17 @@ def topk_spmv_blocked(
     interpret: bool = True,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Single-device multi-core approximate Top-K SpMV via the Pallas kernel."""
+    layout = stream_layout or packed.stream_layout
+    if layout == "fused" and packed.groups is not None:
+        lv, lr = _grouped_local_topk(
+            jnp.asarray(x, jnp.float32), packed, k=k,
+            packets_per_step=packets_per_step,
+            gather_mode=resolve_gather_mode(gather_mode),
+            inner_loop=inner_loop, interpret=interpret, batched=False,
+        )
+        return finalize_candidates(
+            lv, lr, big_k=big_k, **_finalize_kwargs(packed)
+        )
     layout, streams = _kernel_streams(packed, stream_layout)
     lv, lr = bscsr_topk_spmv(
         jnp.asarray(x, jnp.float32),
@@ -661,6 +874,16 @@ def topk_spmv_batched(
     """
     if xs.ndim != 2 or xs.shape[0] == 0:
         raise ValueError(f"xs must be a non-empty (Q, M) batch, got {xs.shape}")
+    layout = stream_layout or packed.stream_layout
+    if layout == "fused" and packed.groups is not None:
+        lv, lr = _grouped_local_topk(
+            jnp.asarray(xs, jnp.float32), packed, k=k,
+            packets_per_step=packets_per_step, gather_mode="take",
+            inner_loop=inner_loop, interpret=interpret, batched=True,
+        )
+        return finalize_candidates_batched(
+            lv, lr, big_k=big_k, **_finalize_kwargs(packed)
+        )
     layout, streams = _kernel_streams(packed, stream_layout)
     lv, lr = bscsr_topk_spmv_multiquery(
         jnp.asarray(xs, jnp.float32),

@@ -38,6 +38,39 @@ def test_simulated_fixed_point_monotone_in_bits(bits, seed):
     assert e_lo <= max(2.0 ** -(bits - 1), f32_floor)
 
 
+@pytest.mark.parametrize("fmt,lo,hi", [("Q7", -128, 127), ("Q15", -32768, 32767)])
+def test_saturation_edges_clip_not_wrap(fmt, lo, hi):
+    """±1.0 sits exactly on the Q-format boundary: +1.0 must saturate to the
+    max code (the two's-complement wrap would flip it to the MOST negative
+    value — a sign error, not a rounding error)."""
+    f = q.FORMATS[fmt]
+    out = q.quantize(np.array([1.0, -1.0], np.float32), f)
+    assert out[0] == hi          # clipped, not wrapped to lo
+    assert out[1] == lo          # -1.0 is exactly representable
+    back = np.asarray(q.host_dequantize(out, f))
+    assert back[0] > 0.99 and back[1] == -1.0
+
+
+def test_all_zero_roundtrip_every_format():
+    """All-zero partitions (tombstoned-out or padding-only) must encode to
+    zero codes and decode back to exact zeros on host and device paths."""
+    z = np.zeros(64, np.float32)
+    for f in q.FORMATS.values():
+        stored = q.quantize(z, f)
+        assert np.all(np.asarray(stored, np.float32) == 0.0)
+        assert np.array_equal(q.host_dequantize(stored, f), z)
+        assert np.array_equal(np.asarray(q.dequantize(stored, f)), z)
+
+
+def test_bf16_subnormal_roundtrip():
+    # smallest positive bf16 subnormal is 2**-133 (= 2**-126 * 2**-7); f32
+    # subnormals reach 2**-149, so the round-trip through host f32 is exact
+    v = np.array([2.0 ** -133, -(2.0 ** -133), 2.0 ** -126], np.float32)
+    f = q.FORMATS["BF16"]
+    back = np.asarray(q.host_dequantize(q.quantize(v, f), f))
+    assert np.array_equal(back, v)
+
+
 def test_bytes_per_value():
     assert q.F32.bytes_per_value == 4
     assert q.BF16.bytes_per_value == 2
