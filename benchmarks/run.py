@@ -3,8 +3,9 @@
 Prints ``name,us_per_call,derived`` CSV (plus verbose detail per benchmark).
 ``--smoke`` runs the CI perf-path smoke instead: tiny shapes through the
 kernel-path sweep (all inner loops, both stream layouts, both dispatch
-paths) and the serve-while-ingest churn axis (both signature modes with
-retrace counting) — no json writes.
+paths), the serve-while-ingest churn axis (both signature modes with
+retrace counting), and the 8-simulated-device sharded serving plane
+(bit-identity + transfer-guard/retrace assertions) — no json writes.
 """
 from __future__ import annotations
 
@@ -19,6 +20,7 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 def main(smoke: bool = False) -> None:
     from benchmarks import (
         bench_kernel_paths,
+        bench_sharded_serving,
         bench_streaming_updates,
         fig5_throughput,
         fig6_roofline,
@@ -29,12 +31,14 @@ def main(smoke: bool = False) -> None:
     )
 
     if smoke:
-        mods = [bench_kernel_paths, bench_streaming_updates]
+        mods = [bench_kernel_paths, bench_streaming_updates,
+                bench_sharded_serving]
         kwargs, banner = {"smoke": True}, " [smoke]"
     else:
         mods = [table1_precision, table2_designs, fig5_throughput,
                 fig6_roofline, fig7_accuracy, kernel_validation,
-                bench_kernel_paths, bench_streaming_updates]
+                bench_kernel_paths, bench_streaming_updates,
+                bench_sharded_serving]
         kwargs, banner = {}, ""
     rows = []
     for mod in mods:

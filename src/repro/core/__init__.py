@@ -7,7 +7,13 @@ from repro.core.bscsr import (
     synthetic_embedding_csr,
     sparsify_topm,
 )
-from repro.core.partition import PartitionPlan, merge_topk
+from repro.core.partition import (
+    PartitionPlan,
+    merge_topk,
+    tree_merge_topk,
+    tree_merge_topk_batched,
+)
+from repro.core.sharded import ShardedTopKSpMVIndex
 from repro.core.precision_model import (
     expected_precision,
     expected_precision_avg,

@@ -81,7 +81,14 @@ def merge_topk(
         vals = jnp.concatenate([vals, jnp.full((pad,), NEG_INF, jnp.float32)])
         rows = jnp.concatenate([rows, jnp.full((pad,), sentinel, jnp.int32)])
     if n_rows is not None:
-        vals = jnp.where(rows < n_rows, vals, NEG_INF)
+        # Normalise every masked entry to the identical (NEG_INF, n_rows)
+        # pair.  Rewriting the row id too (not just the value) is what makes
+        # any tree of merge_topk calls bit-identical to the flat merge: a
+        # masked candidate carries no information, so it must compare equal
+        # no matter which intermediate merge produced it.
+        masked = rows >= n_rows
+        vals = jnp.where(masked, NEG_INF, vals)
+        rows = jnp.where(masked, n_rows, rows)
     # Tie-break deterministically on the lower row id (matches numpy oracle).
     order = jnp.lexsort((rows, -vals))
     top = order[:big_k]
@@ -98,6 +105,66 @@ def globalize_rows(
 def candidates_needed(big_k: int, k: int) -> int:
     """Minimum number of partitions (k*c >= K constraint from §III-A)."""
     return -(-big_k // k)
+
+
+def tree_merge_topk(
+    pool_vals: Sequence[jnp.ndarray],
+    pool_rows: Sequence[jnp.ndarray],
+    big_k: int,
+    n_rows: int | jnp.ndarray | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Log-depth pairwise merge of per-shard candidate pools.
+
+    Merges adjacent pools pairwise, halving the pool count each level —
+    the host-side analogue of the recursive-doubling ``ppermute`` tree the
+    sharded executor runs inside ``shard_map``.  Because ``merge_topk``
+    normalises every masked entry to the identical ``(NEG_INF, n_rows)``
+    sentinel and orders candidates by the total key (value desc, row asc),
+    top-``big_k`` selection is associative: this tree — and any other merge
+    order — is bit-identical to the flat concat-then-``merge_topk``.
+
+    Caveat (shared with ``merge_topk``): a *real* candidate whose score is
+    exactly ``NEG_INF`` with a valid row id is kept, and ranks above the
+    sentinel only through the row-ascending tie-break.
+    """
+    items = [
+        (jnp.asarray(v).reshape(-1), jnp.asarray(r).reshape(-1))
+        for v, r in zip(pool_vals, pool_rows)
+    ]
+    if not items:
+        raise ValueError("tree_merge_topk needs at least one candidate pool")
+    if len(items) == 1:
+        return merge_topk(items[0][0], items[0][1], big_k, n_rows)
+    while len(items) > 1:
+        merged = []
+        for i in range(0, len(items) - 1, 2):
+            (v1, r1), (v2, r2) = items[i], items[i + 1]
+            merged.append(
+                merge_topk(
+                    jnp.concatenate([v1, v2]),
+                    jnp.concatenate([r1, r2]),
+                    big_k,
+                    n_rows,
+                )
+            )
+        if len(items) % 2:
+            merged.append(items[-1])
+        items = merged
+    return items[0]
+
+
+def tree_merge_topk_batched(
+    pool_vals: Sequence[jnp.ndarray],
+    pool_rows: Sequence[jnp.ndarray],
+    big_k: int,
+    n_rows: int | jnp.ndarray | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-query ``tree_merge_topk`` over ``(Q, pool)``-shaped pools."""
+    fn = jax.vmap(
+        lambda vs, rs: tree_merge_topk(list(vs), list(rs), big_k, n_rows),
+        in_axes=(1, 1),
+    )
+    return fn(jnp.stack(list(pool_vals)), jnp.stack(list(pool_rows)))
 
 
 def merge_topk_hierarchical(

@@ -11,6 +11,14 @@ dispatch through the device-resident snapshot plane (``kernels/executor``):
 each snapshot version's streams are pinned on device once, so steady-state
 queries perform zero host->device transfers (``dispatch_info()`` exposes the
 executor caches).
+
+With ``mesh=`` (a ``launch.mesh.make_serving_mesh`` mesh) or ``n_shards=``
+the backing index is a :class:`~repro.core.sharded.ShardedTopKSpMVIndex`
+instead: the collection row-shards across the mesh's "shard" axis (each
+shard device-pinned on its mesh column, per-shard candidates tree-merged
+under global ids) and query batches fan out across the "replica" axis —
+same mutation surface, bit-identical results, docs/SERVING.md §"Sharded
+serving".
 """
 from __future__ import annotations
 
@@ -22,6 +30,7 @@ import numpy as np
 
 from repro.core import bscsr as bscsr_lib
 from repro.core import topk_spmv as topk_lib
+from repro.core import sharded as sharded_lib
 
 
 @dataclasses.dataclass
@@ -57,6 +66,9 @@ class SparseEmbeddingIndex:
         config: Optional[topk_lib.TopKSpMVConfig] = None,
         nnz_per_row: int = 32,
         recall_target: Optional[float] = None,
+        mesh=None,
+        n_shards: Optional[int] = None,
+        native_groups: bool = True,
     ):
         self.csr = csr  # the collection the index was built from (base segment)
         config = config or topk_lib.TopKSpMVConfig()
@@ -66,7 +78,20 @@ class SparseEmbeddingIndex:
             config = dataclasses.replace(config, recall_target=recall_target)
         self.config = config
         self.nnz_per_row = nnz_per_row  # sparsification level for dense upserts
-        self.index = topk_lib.MutableTopKSpMVIndex(csr, self.config)
+        if mesh is not None or (n_shards is not None and n_shards > 1):
+            # Sharded serving plane: row shards pinned per mesh column,
+            # tree-merged under global ids — bit-identical to the
+            # single-device index (core/sharded.py).
+            self.index = sharded_lib.ShardedTopKSpMVIndex(
+                csr, self.config, mesh=mesh, n_shards=n_shards,
+                native_groups=native_groups,
+            )
+        else:
+            self.index = topk_lib.MutableTopKSpMVIndex(csr, self.config)
+
+    @property
+    def is_sharded(self) -> bool:
+        return isinstance(self.index, sharded_lib.ShardedTopKSpMVIndex)
 
     @classmethod
     def from_dense(
@@ -75,16 +100,25 @@ class SparseEmbeddingIndex:
         nnz_per_row: int = 32,
         config: Optional[topk_lib.TopKSpMVConfig] = None,
         recall_target: Optional[float] = None,
+        mesh=None,
+        n_shards: Optional[int] = None,
+        native_groups: bool = True,
     ) -> "SparseEmbeddingIndex":
         """Sparsify dense embeddings (magnitude top-m) and index them."""
         csr = bscsr_lib.sparsify_topm(embeddings, nnz_per_row)
         return cls(csr, config, nnz_per_row=nnz_per_row,
-                   recall_target=recall_target)
+                   recall_target=recall_target, mesh=mesh, n_shards=n_shards,
+                   native_groups=native_groups)
 
     def query(
         self, x: np.ndarray, use_kernel: bool = True
     ) -> Tuple[np.ndarray, np.ndarray]:
         """Top-K (scores, row ids) for one dense query embedding."""
+        if self.is_sharded:
+            v, r = self.index.query(
+                jnp.asarray(x, jnp.float32), use_kernel=use_kernel
+            )
+            return np.asarray(v), np.asarray(r)
         v, r = topk_lib.topk_spmv(
             self.index, jnp.asarray(x, jnp.float32), use_kernel=use_kernel
         )
@@ -107,6 +141,11 @@ class SparseEmbeddingIndex:
         On real TPU silicon pass ``use_kernel=True`` to get the one-pass
         stream amortization the kernel exists for.
         """
+        if self.is_sharded:
+            v, r = self.index.query_batched(
+                jnp.asarray(xs, jnp.float32), use_kernel=use_kernel
+            )
+            return np.asarray(v), np.asarray(r)
         v, r = topk_lib.topk_spmv_batched(
             self.index, jnp.asarray(xs, jnp.float32), use_kernel=use_kernel
         )
@@ -167,6 +206,29 @@ class SparseEmbeddingIndex:
         self.index.compact()
 
     def stats(self) -> SimilaritySearchStats:
+        if self.is_sharded:
+            agg = self.index.aggregate_stats()
+            return SimilaritySearchStats(
+                n_rows=self.index.n_rows,
+                n_cols=agg["n_cols"],
+                nnz=agg["nnz"],
+                num_partitions=self.index.num_cores,
+                bytes_per_nnz=agg["bytes_per_nnz"],
+                stream_bytes=agg["stream_bytes"],
+                expected_precision=self.index.expected_precision,
+                delta_fraction=agg["delta_fraction"],
+                tombstone_count=agg["tombstone_count"],
+                deleted_rows=self.index.deleted_rows,
+                version=self.index.version,
+                stream_layout=agg["stream_layout"],
+                last_refresh_repadded=self.index.last_refresh_repadded,
+                last_refresh_copied=self.index.last_refresh_copied,
+                snapshot_buffers=self.index.snapshot_buffers,
+                value_format_histogram=agg["format_histogram"],
+                value_bytes_per_nnz=agg["value_bytes_per_nnz"],
+                recall_target=self.config.recall_target,
+                predicted_recall=self.index.predicted_recall,
+            )
         packed = self.index.packed
         return SimilaritySearchStats(
             n_rows=self.index.n_rows,
@@ -199,7 +261,13 @@ class SparseEmbeddingIndex:
         compiled query fns vs the live counts inside them.  Steady-state
         serve-while-ingest shows ``retraces`` flat while versions climb;
         see docs/SERVING.md for the field-by-field reference.
+
+        A sharded index reports its topology (shard/replica counts),
+        per-shard versions + signatures, and — on the SPMD path — the
+        bundle's per-shard upload/byte counters instead.
         """
+        if self.is_sharded:
+            return self.index.dispatch_info()
         info = topk_lib.query_executor(self.config).cache_info()
         info["signature"] = self.index.packed.signature_info()
         info["churn_stable"] = self.config.churn_stable

@@ -253,6 +253,8 @@ class MutableTopKSpMVIndex:
         self.total_repadded = 0
         self.last_refresh_copied = 0     # partitions copied into the COW stack
         self.total_copied = 0
+        self.last_refresh_group_copied = 0  # member streams copied into the
+        self.total_group_copied = 0         # COW width-class group stacks
         self.last_compact_parallel = False
         self._refresh()
 
@@ -376,10 +378,14 @@ class MutableTopKSpMVIndex:
         # class pads to its OWN packet cap (anchor-then-bucket, like
         # ``_packet_cap``) so narrow partitions never inherit the widest
         # class's packet count; only dirty / cap-shifted / format-flipped
-        # partitions re-fuse (the per-class np.stack itself is O(class
-        # bytes) — the COW pool does not yet cover the group plane).
+        # partitions re-fuse, and with ``cow_snapshots`` the class stacks are
+        # buffer-pool leases that copy only stale member streams — a
+        # steady-state hetero refresh is O(mutated partitions) like the twin
+        # plane, not O(class bytes).
         groups = None
         fmt_codes = None
+        group_bufs = []
+        group_copied = 0
         if hetero:
             nat: dict = {}
             for n in self._native:
@@ -410,15 +416,29 @@ class MutableTopKSpMVIndex:
                     )
                     self._padded_tagged[ci] = (cap, n.value_format.name, words)
                 by_class.setdefault(cname, []).append(ci)
-            groups = tuple(
-                kernel_ops.StreamGroup(
-                    cname,
-                    tuple(cores),
-                    np.stack([self._padded_tagged[ci][2] for ci in cores]),
-                    self._streams[0].block_size,
+            built = []
+            for cname, cores in sorted(by_class.items()):
+                cap = caps[cname]
+                words_list = [self._padded_tagged[ci][2] for ci in cores]
+                if self.config.cow_snapshots:
+                    gbuf, gcop = self._buffer_pool.lease_group(
+                        tuple(cores), words_list,
+                        self._part_stamps[np.asarray(cores)], cap,
+                        packets_multiple=mult,
+                    )
+                    group_bufs.append(gbuf)
+                    group_copied += gcop
+                    words = gbuf.view()
+                else:
+                    words = np.stack(words_list)
+                    group_copied += len(cores)
+                built.append(
+                    kernel_ops.StreamGroup(
+                        cname, tuple(cores), words,
+                        self._streams[0].block_size,
+                    )
                 )
-                for cname, cores in sorted(by_class.items())
-            )
+            groups = tuple(built)
             fmt_codes = np.array(
                 [FORMATS[f].code for f in self._part_fmts], np.int32
             )
@@ -491,6 +511,10 @@ class MutableTopKSpMVIndex:
                 words=self._padded_words if fused else None,
                 **segment_fields,
             )
+        for gbuf in group_bufs:
+            gbuf.attach(self._packed)
+        self.last_refresh_group_copied = group_copied
+        self.total_group_copied += group_copied
         self.last_refresh_copied = copied
         self.total_copied += copied
         self._version += 1

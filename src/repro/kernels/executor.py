@@ -58,10 +58,11 @@ from __future__ import annotations
 
 import functools
 import weakref
-from typing import Optional, Tuple
+from typing import Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.quantization import FORMATS
 from repro.kernels import ops
@@ -95,14 +96,31 @@ class DeviceSnapshot:
 
     __slots__ = (
         "uid", "stream_layout", "streams", "row_starts", "rows_per_part",
-        "slot_to_row", "tombstones", "args", "signature", "max_slots",
-        "n_rows_logical", "n_rows_sentinel", "block_size", "fmt_name",
-        "groups_meta", "num_cores",
+        "slot_to_row", "tombstones", "row_map", "args", "signature",
+        "max_slots", "n_rows_logical", "n_rows_sentinel", "sentinel_index",
+        "block_size", "fmt_name", "groups_meta", "num_cores",
     )
 
-    def __init__(self, packed: ops.PackedPartitions, stream_layout: str):
+    def __init__(
+        self,
+        packed: ops.PackedPartitions,
+        stream_layout: str,
+        row_map=None,
+        device=None,
+    ):
         self.uid = packed.uid
         self.stream_layout = stream_layout
+        if device is not None:
+            # Pin on a specific device (the sharded plane places each shard
+            # on its mesh column).  jax.default_device keeps jnp.array's
+            # copy semantics — device buffers must never alias host COW
+            # buffers — while committing the arrays there.
+            with jax.default_device(device):
+                self._pin_arrays(packed, stream_layout, row_map)
+            return
+        self._pin_arrays(packed, stream_layout, row_map)
+
+    def _pin_arrays(self, packed, stream_layout, row_map):
         # Mixed-precision snapshots pin one tagged word array PER width
         # class; ``groups_meta`` (class name + core indices, static) tells
         # the compiled fn how to dispatch and scatter them.
@@ -137,12 +155,16 @@ class DeviceSnapshot:
             jnp.array(packed.tombstones)
             if packed.tombstones is not None else None
         )
+        # The sharded plane's local->global id translation rides the snapshot
+        # as one more pinned device array (same lifecycle as the streams).
+        self.row_map = jnp.array(row_map) if row_map is not None else None
         self.max_slots = packed.max_slots
         self.n_rows_logical = packed.n_rows_logical
         # The row-id sentinel is a device-pinned TRACED scalar: the id space
         # grows with every upsert, and baking it into the trace would force
         # a retrace per refresh no matter how well the shapes are bucketed.
         self.n_rows_sentinel = jnp.asarray(packed.n_rows_logical, jnp.int32)
+        self.sentinel_index = len(self.streams) + 2
         self.block_size = packed.block_size
         self.fmt_name = packed.value_format.name
         args = list(self.streams) + [
@@ -152,12 +174,15 @@ class DeviceSnapshot:
             args.append(self.slot_to_row)
         if self.tombstones is not None:
             args.append(self.tombstones)
+        if self.row_map is not None:
+            args.append(self.row_map)
         self.args = tuple(args)
         self.signature = (
             stream_layout,
             tuple((a.shape, str(a.dtype)) for a in self.args),
             self.slot_to_row is not None,
             self.tombstones is not None,
+            self.row_map is not None,
             self.max_slots, self.block_size,
             self.fmt_name,
             # Mixed precision: the per-partition format-code vector and the
@@ -169,16 +194,39 @@ class DeviceSnapshot:
             self.groups_meta,
         )
 
+    def call_args(self, n_rows_override=None) -> tuple:
+        """``args`` with the traced row-id sentinel optionally swapped out.
+
+        The sharded plane serves a shard-local snapshot against the
+        *collection's* (growing) id space: the override is another pinned
+        traced scalar, so swapping it neither retraces nor uploads.
+        """
+        if n_rows_override is None:
+            return self.args
+        i = self.sentinel_index
+        return self.args[:i] + (n_rows_override,) + self.args[i + 1:]
+
 
 def device_snapshot(
-    packed: ops.PackedPartitions, stream_layout: Optional[str] = None
+    packed: ops.PackedPartitions,
+    stream_layout: Optional[str] = None,
+    row_map=None,
+    row_map_key=None,
+    device=None,
 ) -> DeviceSnapshot:
-    """The device-pinned form of ``packed``, uploading at most once per uid."""
+    """The device-pinned form of ``packed``, uploading at most once per uid.
+
+    ``row_map``/``row_map_key`` pin a local->global id translation alongside
+    the snapshot (the key distinguishes pins of the same snapshot with and
+    without a map — a given ``row_map_key`` must always name the same map
+    contents for a given uid).  ``device`` commits the pin to a specific
+    device instead of the process default.
+    """
     layout = stream_layout or packed.stream_layout
-    key = (packed.uid, layout)
+    key = (packed.uid, layout, row_map_key, device)
     snap = _DEVICE_CACHE.get(key)
     if snap is None:
-        snap = DeviceSnapshot(packed, layout)
+        snap = DeviceSnapshot(packed, layout, row_map=row_map, device=device)
         _DEVICE_CACHE[key] = snap
         weakref.finalize(packed, _DEVICE_CACHE.pop, key, None)
     return snap
@@ -263,6 +311,9 @@ class QueryExecutor:
         q: Optional[int] = None,
         path: str = "kernel",
         stream_layout: Optional[str] = None,
+        row_map=None,
+        row_map_key=None,
+        device=None,
     ):
         """Resolve (compiled fn, device snapshot) without running.
 
@@ -274,14 +325,17 @@ class QueryExecutor:
             layout = "split"  # the oracle reads the split arrays
         else:
             layout = stream_layout or packed.stream_layout
-        snap = device_snapshot(packed, layout)
-        if (snap.uid, layout) not in self._pinned:
+        snap = device_snapshot(
+            packed, layout,
+            row_map=row_map, row_map_key=row_map_key, device=device,
+        )
+        if (snap.uid, layout, row_map_key, device) not in self._pinned:
             # A new pin means a snapshot refresh: drop dead pins now.  The
             # zero-retrace steady state never misses the fn cache, so
             # _evict_stale alone would let this set grow by one dead tuple
             # per upsert forever.
             self._pinned &= set(_DEVICE_CACHE.keys())
-            self._pinned.add((snap.uid, layout))
+            self._pinned.add((snap.uid, layout, row_map_key, device))
         key = (path, q, snap.signature)
         fn = self._fns.get(key)
         if fn is None:
@@ -325,11 +379,18 @@ class QueryExecutor:
         packed: ops.PackedPartitions,
         path: str = "kernel",
         stream_layout: Optional[str] = None,
+        row_map=None,
+        row_map_key=None,
+        device=None,
+        n_rows=None,
     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Top-``big_k`` (values, global rows) for one (M,) query."""
-        fn, snap = self.prepare(packed, None, path, stream_layout)
+        fn, snap = self.prepare(
+            packed, None, path, stream_layout,
+            row_map=row_map, row_map_key=row_map_key, device=device,
+        )
         self.dispatches += 1
-        return fn(x, *snap.args)
+        return fn(x, *snap.call_args(n_rows))
 
     def query_batched(
         self,
@@ -337,6 +398,10 @@ class QueryExecutor:
         packed: ops.PackedPartitions,
         path: str = "kernel",
         stream_layout: Optional[str] = None,
+        row_map=None,
+        row_map_key=None,
+        device=None,
+        n_rows=None,
     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """(Q, big_k) answers for a (Q, M) batch, one pass over the stream."""
         xs = jnp.asarray(xs)
@@ -346,11 +411,14 @@ class QueryExecutor:
             )
         q = xs.shape[0]
         bucket = _q_bucket(q) if self.q_bucketing else q
-        fn, snap = self.prepare(packed, bucket, path, stream_layout)
+        fn, snap = self.prepare(
+            packed, bucket, path, stream_layout,
+            row_map=row_map, row_map_key=row_map_key, device=device,
+        )
         self.dispatches += 1
         if bucket != q:
             xs = _query_padder(bucket - q)(xs)
-        vals, rows = fn(xs, *snap.args)
+        vals, rows = fn(xs, *snap.call_args(n_rows))
         return _query_unpadder(q)(vals, rows) if bucket != q else (vals, rows)
 
     def cache_info(self) -> dict:
@@ -374,6 +442,7 @@ class QueryExecutor:
         n_streams = len(snap.streams)
         has_slot = snap.slot_to_row is not None
         has_tomb = snap.tombstones is not None
+        has_map = snap.row_map is not None
         fmt = FORMATS[snap.fmt_name]
         big_k, k = self.big_k, self.k
         max_slots = snap.max_slots
@@ -382,15 +451,19 @@ class QueryExecutor:
             streams = arrs[:n_streams]
             row_starts, rows_per = arrs[n_streams], arrs[n_streams + 1]
             n_rows = arrs[n_streams + 2]     # traced row-id sentinel scalar
-            rest = arrs[n_streams + 3:]
-            slot_to_row = rest[0] if has_slot else None
-            tombstones = rest[-1] if has_tomb else None
-            return streams, row_starts, rows_per, n_rows, slot_to_row, tombstones
+            i = n_streams + 3
+            slot_to_row = arrs[i] if has_slot else None
+            i += 1 if has_slot else 0
+            tombstones = arrs[i] if has_tomb else None
+            i += 1 if has_tomb else 0
+            row_map = arrs[i] if has_map else None
+            return (streams, row_starts, rows_per, n_rows, slot_to_row,
+                    tombstones, row_map)
 
         if path == "reference":
 
             def run(x, *arrs):
-                streams, row_starts, rows_per, n_rows, slot, tombs = (
+                streams, row_starts, rows_per, n_rows, slot, tombs, rmap = (
                     split_args(arrs)
                 )
                 vals, cols, flags = streams
@@ -402,7 +475,7 @@ class QueryExecutor:
                     )
                     return ops.finalize_candidates(
                         lv, lr, row_starts, rows_per, big_k, n_rows,
-                        slot_to_row=slot, tombstones=tombs,
+                        slot_to_row=slot, tombstones=tombs, row_map=rmap,
                     )
 
                 if q is None:
@@ -429,7 +502,7 @@ class QueryExecutor:
                 num_cores = snap.num_cores
 
                 def run(x, *arrs):
-                    streams, row_starts, rows_per, n_rows, slot, tombs = (
+                    streams, row_starts, rows_per, n_rows, slot, tombs, rmap = (
                         split_args(arrs)
                     )
                     xq = jnp.asarray(x, jnp.float32)
@@ -453,13 +526,13 @@ class QueryExecutor:
                     )
                     return finalize(
                         lv, lr, row_starts, rows_per, big_k, n_rows,
-                        slot_to_row=slot, tombstones=tombs,
+                        slot_to_row=slot, tombstones=tombs, row_map=rmap,
                     )
 
             else:
 
                 def run(x, *arrs):
-                    streams, row_starts, rows_per, n_rows, slot, tombs = (
+                    streams, row_starts, rows_per, n_rows, slot, tombs, rmap = (
                         split_args(arrs)
                     )
                     lv, lr = kernel(
@@ -471,13 +544,214 @@ class QueryExecutor:
                     )
                     return finalize(
                         lv, lr, row_starts, rows_per, big_k, n_rows,
-                        slot_to_row=slot, tombstones=tombs,
+                        slot_to_row=slot, tombstones=tombs, row_map=rmap,
                     )
 
         else:
             raise ValueError(f"path must be 'kernel' or 'reference', got {path!r}")
 
         return jax.jit(run)
+
+
+class ShardedDeviceBundle:
+    """Per-shard host blocks pinned per mesh column, assembled into global
+    sharded ``jax.Array``s — the multi-device analogue of the device pin.
+
+    Each *family* (one named array the sharded query fn takes — word streams,
+    slot maps, live-slot counts, tombstone bitmaps, id maps) is a list of
+    per-shard host blocks stacked along a leading shard dim.  ``sync`` ships
+    shard ``s``'s block to every device in its mesh column (all replicas) ONLY
+    when that shard's version changed, and — when per-partition mutation
+    stamps are provided and the block shape is unchanged — ships only the
+    *dirty partitions* via an in-place device scatter (the COW stamp
+    machinery already knows which ones).  Steady-state queries then dispatch
+    against the cached assembled arrays with zero host->device transfers.
+
+    Shipped-byte accounting is per shard (``shard_uploads`` /
+    ``shard_bytes``) plus global counters; ``dispatch_info()`` surfaces them.
+    """
+
+    def __init__(self, mesh, shard_axis: str = "shard"):
+        self.mesh = mesh
+        self.shard_axis = shard_axis
+        self.n_shards = int(mesh.shape[shard_axis])
+        self._fams: dict = {}
+        self.uploads = 0
+        self.host_bytes_shipped = 0
+        self.partitions_shipped = 0
+        self.shard_uploads = [0] * self.n_shards
+        self.shard_bytes = [0] * self.n_shards
+
+    def _count(self, s: Optional[int], nbytes: int) -> None:
+        self.uploads += 1
+        self.host_bytes_shipped += int(nbytes)
+        if s is not None:
+            self.shard_uploads[s] += 1
+            self.shard_bytes[s] += int(nbytes)
+
+    def _sharded_spec(self):
+        return jax.sharding.NamedSharding(
+            self.mesh, jax.sharding.PartitionSpec(self.shard_axis)
+        )
+
+    def _replicated_spec(self):
+        return jax.sharding.NamedSharding(
+            self.mesh, jax.sharding.PartitionSpec()
+        )
+
+    def _device_blocks(self, sharding, gshape) -> dict:
+        """device -> shard block index along the leading dim."""
+        out = {}
+        for d, idx in sharding.addressable_devices_indices_map(gshape).items():
+            sl = idx[0]
+            out[d] = 0 if sl.start is None else int(sl.start)
+        return out
+
+    def _assemble(self, fam) -> jax.Array:
+        return jax.make_array_from_single_device_arrays(
+            fam["gshape"], fam["sharding"],
+            [fam["pieces"][d] for d in fam["devmap"]],
+        )
+
+    def sync(
+        self,
+        name: str,
+        block_shape: tuple,
+        dtype,
+        blocks_fn: Callable[[int], np.ndarray],
+        versions: Sequence,
+        stamps: Optional[Sequence[Optional[np.ndarray]]] = None,
+    ) -> jax.Array:
+        """The assembled global array for this family, shipping only change.
+
+        ``blocks_fn(s)`` lazily materialises shard ``s``'s host block (only
+        called for shards whose version moved).  ``stamps[s]`` (optional)
+        enables partition-granular scatter updates along the block's leading
+        dim.  A ``block_shape`` change (a common bucket doubled) rebuilds the
+        family outright — an O(log growth) event.
+        """
+        S = self.n_shards
+        versions = list(versions)
+        gshape = (S,) + tuple(block_shape)
+        np_dtype = np.dtype(dtype)
+        fam = self._fams.get(name)
+        if fam is None or fam["gshape"] != gshape or fam["dtype"] != np_dtype:
+            sharding = self._sharded_spec()
+            devmap = self._device_blocks(sharding, gshape)
+            blocks = [
+                np.ascontiguousarray(blocks_fn(s)).astype(np_dtype, copy=False)
+                for s in range(S)
+            ]
+            pieces = {}
+            for d, s in devmap.items():
+                pieces[d] = jax.device_put(blocks[s][None], d)
+                self._count(s, blocks[s].nbytes)
+            fam = {
+                "gshape": gshape, "dtype": np_dtype, "sharding": sharding,
+                "devmap": devmap, "pieces": pieces, "versions": versions,
+                "stamps": [
+                    None if stamps is None or stamps[s] is None
+                    else np.array(stamps[s])
+                    for s in range(S)
+                ],
+            }
+            fam["global"] = self._assemble(fam)
+            self._fams[name] = fam
+            return fam["global"]
+
+        changed = False
+        for s in range(S):
+            if fam["versions"][s] == versions[s]:
+                continue
+            blk = np.ascontiguousarray(blocks_fn(s)).astype(
+                np_dtype, copy=False
+            )
+            st_old = fam["stamps"][s]
+            st_new = (
+                None if stamps is None or stamps[s] is None
+                else np.asarray(stamps[s])
+            )
+            dirty = None
+            if (st_old is not None and st_new is not None
+                    and st_old.shape == st_new.shape):
+                dirty = np.nonzero(st_new != st_old)[0]
+            if dirty is not None and dirty.size == 0:
+                pass  # version moved but every partition's bytes are current
+            elif (dirty is not None
+                    and dirty.size <= max(1, blk.shape[0] // 2)):
+                rows = np.ascontiguousarray(blk[dirty])
+                nb = ops.pow2_bucket(int(dirty.size))
+                if nb != dirty.size:
+                    # Pad the scatter to a power-of-two width by REPEATING
+                    # the first dirty index (idempotent: the padded rows
+                    # carry that same partition's data), bounding the number
+                    # of distinct scatter shapes ever compiled.
+                    pad = nb - dirty.size
+                    idxp = np.concatenate(
+                        [dirty, np.full(pad, dirty[0])]
+                    ).astype(np.int32)
+                    rows = np.concatenate(
+                        [rows, np.repeat(rows[:1], pad, axis=0)]
+                    )
+                else:
+                    idxp = dirty.astype(np.int32)
+                for d, sb in fam["devmap"].items():
+                    if sb != s:
+                        continue
+                    di = jax.device_put(idxp, d)
+                    dr = jax.device_put(rows, d)
+                    fam["pieces"][d] = fam["pieces"][d].at[0, di].set(dr)
+                    self._count(s, idxp.nbytes + rows.nbytes)
+                self.partitions_shipped += int(dirty.size)
+            else:
+                for d, sb in fam["devmap"].items():
+                    if sb != s:
+                        continue
+                    fam["pieces"][d] = jax.device_put(blk[None], d)
+                    self._count(s, blk.nbytes)
+                if dirty is not None:
+                    self.partitions_shipped += int(dirty.size)
+            fam["versions"][s] = versions[s]
+            fam["stamps"][s] = st_new
+            changed = True
+        if changed:
+            fam["global"] = self._assemble(fam)
+        return fam["global"]
+
+    def sync_replicated(self, name: str, value: np.ndarray, version) -> jax.Array:
+        """A fully replicated (every device) global array for small metadata
+        like the traced global row-id sentinel."""
+        value = np.asarray(value)
+        fam = self._fams.get(name)
+        if (fam is not None and fam["versions"] == [version]
+                and fam["gshape"] == value.shape):
+            return fam["global"]
+        sharding = self._replicated_spec()
+        pieces = {}
+        for d in self.mesh.devices.flat:
+            pieces[d] = jax.device_put(value, d)
+            self._count(None, value.nbytes)
+        fam = {
+            "gshape": value.shape, "dtype": value.dtype,
+            "sharding": sharding, "devmap": dict.fromkeys(pieces, -1),
+            "pieces": pieces, "versions": [version], "stamps": [],
+        }
+        fam["global"] = jax.make_array_from_single_device_arrays(
+            value.shape, sharding, list(pieces.values())
+        )
+        self._fams[name] = fam
+        return fam["global"]
+
+    def counters(self) -> dict:
+        return {
+            "uploads": self.uploads,
+            "host_bytes_shipped": self.host_bytes_shipped,
+            "partitions_shipped": self.partitions_shipped,
+            "per_shard": [
+                {"uploads": u, "bytes_shipped": b}
+                for u, b in zip(self.shard_uploads, self.shard_bytes)
+            ],
+        }
 
 
 def get_executor(

@@ -555,6 +555,63 @@ class _StackBuffer:
         return v
 
 
+class _GroupStackBuffer:
+    """One preallocated (Cg, capacity, 1+W) tagged width-class stack.
+
+    The mixed-precision analogue of ``_StackBuffer``: a width class's tagged
+    word streams stacked across its member cores, leased to ``StreamGroup``
+    snapshots.  ``stamps`` holds the member cores' mutation stamps in group
+    order, so ``sync`` rewrites only the members whose partitions actually
+    mutated — a format flip always rides a mutation stamp (refresh only ever
+    promotes *mutated* partitions), and a membership change alters the
+    geometry key, so stamp equality is a sufficient freshness check.
+    """
+
+    def __init__(self, geometry: tuple, capacity: int):
+        cores, word_width = geometry
+        self.geometry = geometry
+        self.capacity = capacity
+        self.pad_to = -1
+        self.stamps = np.full(len(cores), -1, np.int64)
+        self.words = np.zeros((len(cores), capacity, word_width), np.int32)
+        self._leases: list = []
+
+    def is_free(self) -> bool:
+        self._leases = [r for r in self._leases if r() is not None]
+        return not self._leases
+
+    def attach(self, snapshot) -> None:
+        self._leases.append(weakref.ref(snapshot))
+
+    def sync(
+        self,
+        words_list: Sequence[np.ndarray],
+        stamps: np.ndarray,
+        pad_to: int,
+    ) -> int:
+        """Copy in stale member streams; returns how many were copied."""
+        stale_all = pad_to != self.pad_to
+        copied = 0
+        for j, w in enumerate(words_list):
+            if not stale_all and self.stamps[j] == stamps[j]:
+                continue
+            self.words[j, :pad_to] = w
+            copied += 1
+        self.stamps[:] = stamps
+        self.pad_to = pad_to
+        return copied
+
+    def view(self) -> np.ndarray:
+        """Read-only (Cg, pad_to, 1+W) view (same aliasing rules as
+        ``_StackBuffer.view``: strict slice, copy when contiguous)."""
+        assert self.capacity > self.pad_to
+        v = self.words[:, : self.pad_to]
+        if v.flags.c_contiguous:
+            v = v.copy()
+        v.setflags(write=False)
+        return v
+
+
 class SnapshotBufferPool:
     """Copy-on-write stacked snapshot buffers for a mutable index.
 
@@ -576,9 +633,10 @@ class SnapshotBufferPool:
         self.headroom = headroom
         self.max_free = max_free
         self._buffers: list = []
+        self._group_buffers: list = []
 
     def __len__(self) -> int:
-        return len(self._buffers)
+        return len(self._buffers) + len(self._group_buffers)
 
     def lease(
         self,
@@ -622,6 +680,40 @@ class SnapshotBufferPool:
         self._buffers = keep
         return buf, buf.sync(padded, words, stamps, pad_to)
 
+    def lease_group(
+        self,
+        cores: Tuple[int, ...],
+        words_list: Sequence[np.ndarray],
+        stamps: np.ndarray,
+        pad_to: int,
+        packets_multiple: int = 2,
+    ) -> Tuple[_GroupStackBuffer, int]:
+        """A free, synced width-class stack -> (buffer, copied count).
+
+        ``cores`` (the class's member partitions, in group order) is part of
+        the geometry key: membership changes — a promotion moving a core
+        between width classes — land in a fresh buffer rather than a stale
+        one.  Same capacity/aliasing invariants as ``lease``.
+        """
+        geometry = (tuple(cores), words_list[0].shape[1])
+        buf, keep, free_kept = None, [], 0
+        for b in self._group_buffers:
+            if b.is_free():
+                if (b.geometry != geometry or b.capacity <= pad_to
+                        or free_kept >= self.max_free):
+                    continue
+                free_kept += 1
+                if buf is None:
+                    buf = b
+            keep.append(b)
+        if buf is None:
+            extra = -(-int(pad_to * self.headroom) // packets_multiple)
+            cap = pad_to + max(packets_multiple, extra * packets_multiple)
+            buf = _GroupStackBuffer(geometry, cap)
+            keep.append(buf)
+        self._group_buffers = keep
+        return buf, buf.sync(words_list, stamps, pad_to)
+
 
 def finalize_candidates(
     local_vals: jnp.ndarray,   # (C, k)
@@ -632,6 +724,7 @@ def finalize_candidates(
     n_rows: int,
     slot_to_row: Optional[jnp.ndarray] = None,  # (C, L) slot -> global row id
     tombstones: Optional[jnp.ndarray] = None,   # (n_rows,) bool deleted ids
+    row_map: Optional[jnp.ndarray] = None,      # (L2,) local -> global row id
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Mask sentinels/tombstones, globalize slot ids, merge c*k into Top-K.
 
@@ -641,6 +734,16 @@ def finalize_candidates(
     ``tombstones`` bitmap additionally masks deleted global row ids — it is
     what keeps a deleted id unreturnable after compaction re-encodes the
     stream.
+
+    ``row_map`` is the sharded plane's extra hop: a shard-local index
+    resolves candidates to *shard-local* ids, and ``row_map`` translates
+    those to the sharded collection's global ids (``INVALID_ROW`` entries
+    mask padding past the shard's id space).  It applies *after* the local
+    ``slot_to_row``/``tombstones`` masks, so ``tombstones`` stays indexed by
+    the same (local) id space as ``slot_to_row``; ``n_rows`` must then be
+    the *global* sentinel, which makes per-shard merges tie-break on global
+    ids — the property that keeps sharded top-k bit-identical to the
+    single-device merge.
     """
     valid = local_rows < rows_per_part[:, None]
     if slot_to_row is None:
@@ -652,6 +755,11 @@ def finalize_candidates(
     if tombstones is not None:
         safe = jnp.clip(global_rows, 0, tombstones.shape[0] - 1)
         valid = valid & ~tombstones[safe]
+    if row_map is not None:
+        safe = jnp.clip(global_rows, 0, row_map.shape[0] - 1)
+        mapped = row_map[safe]
+        valid = valid & (mapped != INVALID_ROW)
+        global_rows = mapped
     vals = jnp.where(valid, local_vals, NEG_INF)
     rows = jnp.where(valid, global_rows, n_rows)
     return partition_lib.merge_topk(vals, rows, big_k, n_rows)
@@ -666,6 +774,7 @@ def finalize_candidates_batched(
     n_rows: int,
     slot_to_row: Optional[jnp.ndarray] = None,
     tombstones: Optional[jnp.ndarray] = None,
+    row_map: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Per-query finalize over the multi-query kernel's (C, Q, k) candidates."""
     fin = functools.partial(
@@ -676,6 +785,7 @@ def finalize_candidates_batched(
         n_rows=n_rows,
         slot_to_row=slot_to_row,
         tombstones=tombstones,
+        row_map=row_map,
     )
     return jax.vmap(fin, in_axes=(1, 1))(local_vals, local_rows)  # (Q, big_k)
 

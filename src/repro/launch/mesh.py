@@ -6,6 +6,7 @@ touches jax device state.
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -19,3 +20,25 @@ def make_host_mesh(model: int = 1):
     n = len(jax.devices())
     assert n % model == 0
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_serving_mesh(n_shards: int = 1, n_replicas: int = 1, devices=None):
+    """A ("replica", "shard") mesh for the sharded top-k serving plane.
+
+    Rows (the index) shard across the "shard" axis; queries fan out across
+    the "replica" axis, each replica group holding a full copy of every
+    shard.  Uses the first ``n_replicas * n_shards`` process devices unless
+    ``devices`` pins an explicit ordering.
+    """
+    devs = list(devices) if devices is not None else jax.devices()
+    need = n_shards * n_replicas
+    if len(devs) < need:
+        raise ValueError(
+            f"serving mesh needs {need} devices "
+            f"({n_replicas} replicas x {n_shards} shards), "
+            f"have {len(devs)}"
+        )
+    grid = np.empty((n_replicas, n_shards), dtype=object)
+    for i, d in enumerate(devs[:need]):
+        grid[i // n_shards, i % n_shards] = d
+    return jax.sharding.Mesh(grid, ("replica", "shard"))

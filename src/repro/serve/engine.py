@@ -7,6 +7,12 @@ partitioned Top-K SpMV) instead of the dense argmax; its queries dispatch
 through the device-resident executor, so the embedding stream is pinned on
 device once and every decode step's Top-K is a compiled call with zero
 host->device stream traffic.
+
+For multi-device deployments pass a ``head_cfg`` with ``mesh=`` (from
+``launch.mesh.make_serving_mesh``): the vocab stream row-shards across the
+mesh's "shard" axis and decode batches fan out across "replica" — the head
+then serves through ``core.sharded.ShardedTopKSpMVIndex`` with bit-identical
+token ids (docs/SERVING.md §"Sharded serving").
 """
 from __future__ import annotations
 

@@ -11,6 +11,13 @@ version's streams are pinned on device once, and a version bump (update or
 compaction) invalidates exactly that pin.  This is the ROADMAP "streaming
 index updates" item: the paper's static benchmark index, made a living
 service.
+
+The service is shard-transparent: build the backing index with ``mesh=`` or
+``n_shards=`` (``SparseEmbeddingIndex(..., mesh=make_serving_mesh(...))``)
+and every ``search``/``ingest``/``delete``/compaction call flows through the
+sharded serving plane unchanged — refreshes ship only the dirty partitions
+to the owning shard's device, and ``dispatch_info()`` reports the topology
+plus per-shard transfer counters (docs/SERVING.md §"Sharded serving").
 """
 from __future__ import annotations
 

@@ -40,6 +40,10 @@ class TopKHeadConfig:
     block_size: int = 256
     value_format: str = "BF16"
     stream_layout: str = "fused"    # one contiguous word stream per core
+    mesh: Optional[object] = None   # ("replica", "shard") serving mesh: shard
+                                    # the vocab stream + fan decode batches out
+                                    # (launch.mesh.make_serving_mesh)
+    n_shards: int = 1               # shard count without a mesh (testing)
 
 
 class ApproxTopKHead:
@@ -52,22 +56,31 @@ class ApproxTopKHead:
         csr = bscsr_lib.sparsify_topm(
             self.embedding, min(self.cfg.nnz_per_row, d), normalize=False
         )
-        self.index = build_index(
-            csr,
-            TopKSpMVConfig(
-                big_k=self.cfg.big_k,
-                k=self.cfg.k,
-                num_partitions=self.cfg.num_partitions,
-                block_size=self.cfg.block_size,
-                value_format=self.cfg.value_format,
-                stream_layout=self.cfg.stream_layout,
-            ),
+        index_cfg = TopKSpMVConfig(
+            big_k=self.cfg.big_k,
+            k=self.cfg.k,
+            num_partitions=self.cfg.num_partitions,
+            block_size=self.cfg.block_size,
+            value_format=self.cfg.value_format,
+            stream_layout=self.cfg.stream_layout,
         )
+        self._sharded = self.cfg.mesh is not None or self.cfg.n_shards > 1
+        if self._sharded:
+            from repro.core.sharded import ShardedTopKSpMVIndex
+
+            self.index = ShardedTopKSpMVIndex(
+                csr, index_cfg, mesh=self.cfg.mesh,
+                n_shards=(self.cfg.n_shards if self.cfg.mesh is None else None),
+            )
+        else:
+            self.index = build_index(csr, index_cfg)
 
     def dispatch_info(self) -> dict:
         """Cache stats of the device-resident executor serving this head."""
         from repro.core.topk_spmv import query_executor
 
+        if self._sharded:
+            return self.index.dispatch_info()
         return query_executor(self.index.config).cache_info()
 
     @property
@@ -82,9 +95,15 @@ class ApproxTopKHead:
         self, hidden: np.ndarray, use_kernel: bool = False
     ) -> Tuple[np.ndarray, np.ndarray]:
         """Approximate top-K (logits, token ids) for one hidden state (D,)."""
-        v, r = run_topk_spmv(
-            self.index, jnp.asarray(hidden, jnp.float32), use_kernel=use_kernel
-        )
+        if self._sharded:
+            v, r = self.index.query(
+                jnp.asarray(hidden, jnp.float32), use_kernel=use_kernel
+            )
+        else:
+            v, r = run_topk_spmv(
+                self.index, jnp.asarray(hidden, jnp.float32),
+                use_kernel=use_kernel,
+            )
         return np.asarray(v), np.asarray(r)
 
     def topk_logits_batch(
@@ -96,9 +115,15 @@ class ApproxTopKHead:
         pass over the sparsified-embedding stream (one pallas_call, no
         per-row Python loop), returning (B, big_k) arrays.
         """
-        v, r = run_topk_spmv_batched(
-            self.index, jnp.asarray(hiddens, jnp.float32), use_kernel=use_kernel
-        )
+        if self._sharded:
+            v, r = self.index.query_batched(
+                jnp.asarray(hiddens, jnp.float32), use_kernel=use_kernel
+            )
+        else:
+            v, r = run_topk_spmv_batched(
+                self.index, jnp.asarray(hiddens, jnp.float32),
+                use_kernel=use_kernel,
+            )
         return np.asarray(v), np.asarray(r)
 
     def exact_topk_logits(self, hidden: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:

@@ -44,6 +44,11 @@ class ShardingRules:
 DEFAULT_RULES = ShardingRules(
     rules=(
         ("batch", ("pod", "data")),
+        # serving plane (launch.mesh.make_serving_mesh): the top-k index's
+        # leading shard dim and the query batch's replica fan-out.  Both drop
+        # harmlessly on model meshes without these axes (_present filters).
+        ("topk_shards", "shard"),
+        ("topk_queries", "replica"),
         ("seq", None),
         # decode caches: kv_heads (earlier dim) takes "model" when divisible;
         # otherwise the seq dim picks the axis up (greedy per-tensor dedup) —

@@ -135,7 +135,9 @@ class TestDevicePinning:
         packed = ops.pack_partitions(csr, 2, 32, "F32", stream_layout="fused")
         ex = executor_lib.QueryExecutor(big_k=BIG_K, k=8)
         ex.query(jnp.asarray(x), packed)
-        key = (packed.uid, "fused")
+        # cache key: (uid, layout, row_map_key, device) — no row map and no
+        # explicit device pin on this plain dispatch
+        key = (packed.uid, "fused", None, None)
         assert key in executor_lib._DEVICE_CACHE
         del packed
         gc.collect()

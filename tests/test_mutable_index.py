@@ -365,6 +365,67 @@ class TestCOWSnapshots:
         np.testing.assert_allclose(np.asarray(av), ev, rtol=1e-4, atol=1e-5)
 
 
+class TestCOWGroupStacks:
+    """Mixed-precision width-class group stacks ride the same COW pool:
+    a refresh copies only the member streams mutated since the leased
+    buffer was last synced, and held snapshots stay frozen."""
+
+    @staticmethod
+    def hetero_index(**cfg_kwargs):
+        rng = np.random.default_rng(31)
+        csr = bscsr.synthetic_embedding_csr(96, N_COLS, 6, "gamma", 13)
+        cfg = TopKSpMVConfig(big_k=8, k=8, num_partitions=4, block_size=32,
+                             stream_layout="fused", recall_target=0.9,
+                             **cfg_kwargs)
+        return MutableTopKSpMVIndex(csr, cfg), rng
+
+    def test_steady_state_group_copies_bounded(self):
+        import gc
+
+        index, rng = self.hetero_index()
+        packed = index.packed
+        assert packed.groups is not None, "hetero index must stream groups"
+        total = sum(len(g.cores) for g in packed.groups)
+        assert index.last_refresh_group_copied == total  # initial stack fill
+        del packed
+        for _ in range(4):  # steady state: no external snapshot refs held
+            index.add_rows([random_row(rng)])
+            gc.collect()
+        # ping-pong buffers: each refresh copies at most the member streams
+        # mutated since THAT group buffer was last synced — never the stack
+        assert index.last_refresh_group_copied <= 2
+        assert index.last_refresh_group_copied < total
+
+    def test_held_hetero_snapshots_bit_identical(self):
+        index, rng = self.hetero_index()
+        held = []
+        for _ in range(3):  # hold every snapshot: pool must grow, not alias
+            index.add_rows([random_row(rng)])
+            packed = index.packed
+            held.append(
+                (packed, [g.words.copy() for g in packed.groups])
+            )
+        index.replace_rows([2], [random_row(rng)])
+        index.delete_rows([4])
+        for packed, words in held:
+            for g, w in zip(packed.groups, words):
+                np.testing.assert_array_equal(g.words, w)
+
+    def test_group_cow_equals_legacy_stack(self):
+        results = []
+        for cow in (True, False):
+            index, rng = self.hetero_index(cow_snapshots=cow)
+            index.add_rows([random_row(rng) for _ in range(3)])
+            index.replace_rows([5], [random_row(rng)])
+            index.delete_rows([7])
+            results.append(index.packed)
+        cow_p, stack_p = results
+        assert len(cow_p.groups) == len(stack_p.groups)
+        for gc_, gs in zip(cow_p.groups, stack_p.groups):
+            assert gc_.cores == gs.cores
+            np.testing.assert_array_equal(gc_.words, gs.words)
+
+
 class TestParallelCompaction:
     def test_parallel_equals_serial(self):
         results = []

@@ -1,0 +1,455 @@
+"""Sharded multi-replica serving plane (core/sharded.py).
+
+Three layers of guarantees, each tested against the single-device oracle:
+
+1. Tree-merge algebra: ``tree_merge_topk`` (any pairing order) is
+   bit-identical to the flat concat-then-``merge_topk`` — the property the
+   log-depth ppermute reduction inside shard_map relies on.
+2. ``ShardedTopKSpMVIndex`` returns bit-identical (values, global row ids)
+   to the single-device ``topk_spmv`` across inner loops, stream layouts,
+   shard counts, churn (add/replace/delete), tombstones and compaction.
+3. Steady-state dispatch is device-resident: the SPMD path performs zero
+   host->device transfers (transfer-guard-asserted) and zero retraces
+   across upsert->query cycles after the first bucket jump.
+
+An 8-forced-host-device subprocess run exercises the real multi-device
+mesh (4 shards x 2 replicas + a non-power-of-two shard axis).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bscsr import synthetic_embedding_csr
+from repro.core.partition import (
+    NEG_INF,
+    merge_topk,
+    tree_merge_topk,
+    tree_merge_topk_batched,
+)
+from repro.core.sharded import ShardedTopKSpMVIndex
+from repro.core.topk_spmv import (
+    MutableTopKSpMVIndex,
+    TopKSpMVConfig,
+    topk_spmv,
+    topk_spmv_batched,
+)
+from repro.launch.mesh import make_serving_mesh
+
+
+def make_problem(n_rows=240, n_cols=96, nnz=10, seed=0):
+    csr = synthetic_embedding_csr(n_rows, n_cols, nnz, "gamma", seed)
+    x = np.random.default_rng(seed + 1).standard_normal(n_cols).astype(
+        np.float32
+    )
+    return csr, x
+
+
+def sparse_rows(rng, n, n_cols, nnz=10):
+    rows = []
+    for _ in range(n):
+        cols = np.sort(rng.choice(n_cols, size=nnz, replace=False))
+        rows.append((cols.astype(np.int32),
+                     rng.standard_normal(nnz).astype(np.float32)))
+    return rows
+
+
+def assert_same(a, b, msg=""):
+    va, ra = a
+    vb, rb = b
+    np.testing.assert_array_equal(np.asarray(va), np.asarray(vb), err_msg=msg)
+    np.testing.assert_array_equal(np.asarray(ra), np.asarray(rb), err_msg=msg)
+
+
+class TestTreeMergeProperty:
+    """Satellite: any merge tree == flat merge, bit for bit."""
+
+    def _pools(self, rng, n_pools, pool, n_rows, all_negative=False):
+        vals, rows = [], []
+        for _ in range(n_pools):
+            v = rng.standard_normal(pool).astype(np.float32)
+            if all_negative:
+                v = -np.abs(v) - 1.0
+            # Inject exact ties across pools and sentinel/padding entries.
+            v[:: 3] = np.float32(-0.5 if all_negative else 0.5)
+            r = rng.integers(0, n_rows + 4, size=pool).astype(np.int32)
+            v[r >= n_rows] = NEG_INF  # arbitrary garbage the mask must hide
+            vals.append(jnp.asarray(v))
+            rows.append(jnp.asarray(r))
+        return vals, rows
+
+    @pytest.mark.parametrize("n_pools", list(range(1, 9)))
+    def test_tree_equals_flat(self, n_pools):
+        rng = np.random.default_rng(n_pools)
+        vals, rows = self._pools(rng, n_pools, pool=24, n_rows=100)
+        big_k = 16
+        tv, tr = tree_merge_topk(vals, rows, big_k, 100)
+        fv, fr = merge_topk(jnp.concatenate(vals), jnp.concatenate(rows),
+                            big_k, 100)
+        assert_same((tv, tr), (fv, fr), f"n_pools={n_pools}")
+
+    @pytest.mark.parametrize("n_pools", [2, 3, 5, 8])
+    def test_all_negative_scores(self, n_pools):
+        """Every real score < 0: masked NEG_INF sentinels must still lose."""
+        rng = np.random.default_rng(100 + n_pools)
+        vals, rows = self._pools(rng, n_pools, pool=24, n_rows=60,
+                                 all_negative=True)
+        tv, tr = tree_merge_topk(vals, rows, 16, 60)
+        fv, fr = merge_topk(jnp.concatenate(vals), jnp.concatenate(rows),
+                            16, 60)
+        assert_same((tv, tr), (fv, fr))
+        # real (negative) candidates outrank the n_rows sentinel
+        valid = np.asarray(tr) < 60
+        assert valid[: valid.sum()].all(), "sentinels sorted before candidates"
+
+    def test_merge_order_invariance(self):
+        """Shuffled pool order changes nothing: selection is associative."""
+        rng = np.random.default_rng(7)
+        vals, rows = self._pools(rng, 6, pool=20, n_rows=80)
+        ref = tree_merge_topk(vals, rows, 12, 80)
+        for seed in range(4):
+            perm = np.random.default_rng(seed).permutation(6)
+            got = tree_merge_topk([vals[i] for i in perm],
+                                  [rows[i] for i in perm], 12, 80)
+            assert_same(got, ref, f"perm={perm}")
+
+    def test_pool_smaller_than_big_k(self):
+        """Under-full pools pad with (NEG_INF, n_rows) — shape contract holds."""
+        vals = [jnp.asarray([1.0, 2.0], jnp.float32)]
+        rows = [jnp.asarray([4, 1], jnp.int32)]
+        v, r = tree_merge_topk(vals, rows, 8, 10)
+        assert v.shape == (8,) and r.shape == (8,)
+        np.testing.assert_array_equal(np.asarray(r)[:2], [1, 4])
+        assert (np.asarray(r)[2:] == 10).all()
+        assert (np.asarray(v)[2:] == np.asarray(NEG_INF)).all()
+
+    def test_batched_matches_per_query(self):
+        rng = np.random.default_rng(11)
+        q, pools, pool, n_rows, big_k = 5, 4, 16, 50, 12
+        vals = [jnp.asarray(rng.standard_normal((q, pool)), jnp.float32)
+                for _ in range(pools)]
+        rows = [jnp.asarray(rng.integers(0, n_rows, size=(q, pool)), jnp.int32)
+                for _ in range(pools)]
+        bv, br = tree_merge_topk_batched(vals, rows, big_k, n_rows)
+        for i in range(q):
+            sv, sr = tree_merge_topk([v[i] for v in vals],
+                                     [r[i] for r in rows], big_k, n_rows)
+            assert_same((bv[i], br[i]), (sv, sr), f"query {i}")
+
+
+class TestPerShardEquivalence:
+    """Sharded == single-device, bit for bit (per-shard dispatch path)."""
+
+    @pytest.mark.parametrize("n_shards", [1, 3, 4])
+    def test_static_query(self, n_shards):
+        csr, x = make_problem()
+        cfg = TopKSpMVConfig(big_k=16, k=8, num_partitions=12, block_size=64)
+        single = MutableTopKSpMVIndex(csr, cfg)
+        sharded = ShardedTopKSpMVIndex(csr, cfg, n_shards=n_shards)
+        assert_same(sharded.query(jnp.asarray(x)),
+                    topk_spmv(single, jnp.asarray(x)))
+
+    @pytest.mark.parametrize("inner_loop",
+                             ["linear", "legacy", "linear-seg", "linear-topk"])
+    @pytest.mark.parametrize("layout", ["fused", "split"])
+    def test_inner_loops_and_layouts(self, inner_loop, layout):
+        csr, x = make_problem(seed=3)
+        cfg = TopKSpMVConfig(big_k=16, k=8, num_partitions=8, block_size=64,
+                             inner_loop=inner_loop, stream_layout=layout)
+        single = MutableTopKSpMVIndex(csr, cfg)
+        sharded = ShardedTopKSpMVIndex(csr, cfg, n_shards=4)
+        assert_same(sharded.query(jnp.asarray(x)),
+                    topk_spmv(single, jnp.asarray(x)),
+                    f"{inner_loop}/{layout}")
+
+    def test_batched(self):
+        csr, _ = make_problem(seed=5)
+        xs = np.random.default_rng(9).standard_normal((6, 96)).astype(
+            np.float32
+        )
+        cfg = TopKSpMVConfig(big_k=16, k=8, num_partitions=8, block_size=64)
+        single = MutableTopKSpMVIndex(csr, cfg)
+        sharded = ShardedTopKSpMVIndex(csr, cfg, n_shards=4)
+        assert_same(sharded.query_batched(jnp.asarray(xs)),
+                    topk_spmv_batched(single, jnp.asarray(xs)))
+
+    def test_reference_path(self):
+        csr, x = make_problem(seed=6)
+        cfg = TopKSpMVConfig(big_k=16, k=8, num_partitions=8, block_size=64)
+        single = MutableTopKSpMVIndex(csr, cfg)
+        sharded = ShardedTopKSpMVIndex(csr, cfg, n_shards=2)
+        assert_same(sharded.query(jnp.asarray(x), use_kernel=False),
+                    topk_spmv(single, jnp.asarray(x), use_kernel=False))
+
+    @pytest.mark.parametrize("n_shards", [3, 4])
+    def test_churn_and_tombstones(self, n_shards):
+        """add/replace/delete route to the same global state as one device."""
+        csr, x = make_problem(n_rows=180, seed=8)
+        cfg = TopKSpMVConfig(big_k=16, k=8, num_partitions=12, block_size=64)
+        single = MutableTopKSpMVIndex(csr, cfg)
+        sharded = ShardedTopKSpMVIndex(csr, cfg, n_shards=n_shards)
+        rng = np.random.default_rng(42)
+        xq = jnp.asarray(x)
+
+        batch = sparse_rows(rng, 7, 96)
+        assert single.add_rows(batch) == sharded.add_rows(batch)
+        assert_same(sharded.query(xq), topk_spmv(single, xq), "after add")
+
+        ids = [3, 50, 170, 181]  # spans shards, includes a fresh gid
+        rep = sparse_rows(rng, len(ids), 96)
+        single.replace_rows(ids, rep)
+        sharded.replace_rows(ids, rep)
+        assert_same(sharded.query(xq), topk_spmv(single, xq), "after replace")
+
+        dels = [0, 44, 95, 179]
+        single.delete_rows(dels)
+        sharded.delete_rows(dels)
+        assert sharded.deleted_rows == single.deleted_rows
+        assert_same(sharded.query(xq), topk_spmv(single, xq), "after delete")
+
+        # deleted rows never resurface: their gids absent from results
+        _, r = sharded.query(xq)
+        assert not set(np.asarray(r).tolist()) & set(dels)
+
+        single.compact()
+        sharded.compact()
+        assert_same(sharded.query(xq), topk_spmv(single, xq), "after compact")
+        assert sharded.n_rows == single.n_rows
+
+        # post-compact churn: generation counter must keep maps/stamps fresh
+        more = sparse_rows(rng, 5, 96)
+        assert single.add_rows(more) == sharded.add_rows(more)
+        assert_same(sharded.query(xq), topk_spmv(single, xq),
+                    "post-compact add")
+
+    def test_dispatch_info_topology(self):
+        csr, _ = make_problem()
+        cfg = TopKSpMVConfig(big_k=16, k=8, num_partitions=12, block_size=64)
+        sharded = ShardedTopKSpMVIndex(csr, cfg, n_shards=3)
+        info = sharded.dispatch_info()
+        assert info["path"] == "per_shard"
+        assert info["topology"]["n_shards"] == 3
+        assert info["topology"]["partitions_per_shard"] == 4
+        assert len(info["per_shard"]) == 3
+        assert "signature" in info["per_shard"][0]
+
+    def test_shard_count_must_divide_partitions(self):
+        csr, _ = make_problem()
+        cfg = TopKSpMVConfig(big_k=16, k=8, num_partitions=12, block_size=64)
+        with pytest.raises(ValueError, match="divide"):
+            ShardedTopKSpMVIndex(csr, cfg, n_shards=5)
+
+
+class TestMixedPrecisionSharding:
+    """Satellite: shard-local regrouping + f32-twin SPMD fallback."""
+
+    def _cfg(self):
+        return TopKSpMVConfig(big_k=16, k=8, num_partitions=8, block_size=64,
+                              recall_target=0.95)
+
+    def test_shard_local_groups(self):
+        """Each shard regroups its own partitions into local width classes."""
+        csr, x = make_problem(n_rows=320, seed=12)
+        sharded = ShardedTopKSpMVIndex(csr, self._cfg(), n_shards=4)
+        fmts = sharded.partition_formats
+        assert len(fmts) == 8
+        # per-shard histograms merge into the aggregate one
+        agg = sharded.aggregate_stats()["format_histogram"]
+        assert sum(agg.values()) == 8
+        v, r = sharded.query(jnp.asarray(x))
+        assert np.asarray(v).shape == (16,)
+        assert sharded.predicted_recall is None or \
+            sharded.predicted_recall <= 1.0
+
+    def test_f32_twin_fallback_matches_native(self):
+        """native_groups=False (split f32 twins) == native grouped streams."""
+        csr, x = make_problem(n_rows=320, seed=12)
+        native = ShardedTopKSpMVIndex(csr, self._cfg(), n_shards=4,
+                                      native_groups=True)
+        twins = ShardedTopKSpMVIndex(csr, self._cfg(), n_shards=4,
+                                     native_groups=False)
+        assert_same(twins.query(jnp.asarray(x)),
+                    native.query(jnp.asarray(x)))
+
+
+class TestSpmdSingleDevice:
+    """SPMD shard_map path on a trivial (1,1) mesh — runs on one device."""
+
+    def _mesh(self):
+        return make_serving_mesh(n_shards=1, n_replicas=1)
+
+    def test_bit_identity(self):
+        csr, x = make_problem(seed=20)
+        cfg = TopKSpMVConfig(big_k=16, k=8, num_partitions=8, block_size=64)
+        single = MutableTopKSpMVIndex(csr, cfg)
+        sharded = ShardedTopKSpMVIndex(csr, cfg, mesh=self._mesh())
+        assert sharded.dispatch_info()["path"] == "spmd"
+        xq = jnp.asarray(x)
+        assert_same(sharded.query(xq), topk_spmv(single, xq))
+        xs = jnp.asarray(
+            np.random.default_rng(0).standard_normal((3, 96)), jnp.float32
+        )
+        assert_same(sharded.query_batched(xs),
+                    topk_spmv_batched(single, xs))
+
+    def test_zero_transfer_zero_retrace_steady_state(self):
+        """After warmup + first bucket jump: no H2D transfers, no retraces."""
+        csr, x = make_problem(seed=21)
+        cfg = TopKSpMVConfig(big_k=16, k=8, num_partitions=8, block_size=64)
+        mesh = self._mesh()
+        sharded = ShardedTopKSpMVIndex(csr, cfg, mesh=mesh)
+        spec = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+        xq = jax.device_put(jnp.asarray(x), spec)
+        sharded.query(xq)  # warmup: streams pinned, fn compiled
+
+        with jax.transfer_guard("disallow"):
+            v, r = sharded.query(xq)
+        np.asarray(v), np.asarray(r)  # D2H outside the guard
+
+        rng = np.random.default_rng(1)
+        sharded.add_rows(sparse_rows(rng, 1, 96))
+        sharded.query(xq)  # ships dirty partitions + the one bucket retrace
+        base = sharded.dispatch_info()
+        # 1-row cycles: routing spreads delta packets across cores, so the
+        # per-core packet cap stays inside one pow2 bucket (same sizing as
+        # the single-device zero-retrace test in test_executor.py).
+        for cycle in range(3):  # steady churn: upsert -> query -> query
+            sharded.add_rows(sparse_rows(rng, 1, 96))
+            sharded.query(xq)  # ships deltas (allowed)
+            with jax.transfer_guard("disallow"):
+                v, r = sharded.query(xq)  # steady-state: zero transfers
+            np.asarray(v), np.asarray(r)
+        info = sharded.dispatch_info()
+        assert info["retraces"] == base["retraces"], \
+            "steady-state churn must not retrace"
+
+    def test_dirty_partition_shipping(self):
+        """A refresh ships only the mutated partitions, not the stream."""
+        csr, x = make_problem(seed=22)
+        cfg = TopKSpMVConfig(big_k=16, k=8, num_partitions=8, block_size=64)
+        sharded = ShardedTopKSpMVIndex(csr, cfg, mesh=self._mesh())
+        xq = jnp.asarray(x)
+        rng = np.random.default_rng(2)
+        sharded.query(xq)
+        # first mutation jumps the packet-cap bucket -> full ship; later
+        # same-bucket mutations go through the stamp-granular dirty scatter
+        sharded.add_rows(sparse_rows(rng, 2, 96))
+        sharded.query(xq)
+        before = sharded.dispatch_info()["bundle"]["partitions_shipped"]
+        sharded.add_rows(sparse_rows(rng, 2, 96))
+        sharded.query(xq)
+        shipped = (sharded.dispatch_info()["bundle"]["partitions_shipped"]
+                   - before)
+        assert 0 < shipped < 8, f"shipped {shipped}/8 partitions"
+
+
+@pytest.mark.slow
+class TestMultiDeviceSubprocess:
+    """Real 8-forced-host-device run: mesh sharding + replicas end to end."""
+
+    CODE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np, jax.numpy as jnp
+from repro.core.bscsr import synthetic_embedding_csr
+from repro.core.sharded import ShardedTopKSpMVIndex
+from repro.core.topk_spmv import (MutableTopKSpMVIndex, TopKSpMVConfig,
+                                  topk_spmv, topk_spmv_batched)
+from repro.launch.mesh import make_serving_mesh
+assert jax.device_count() == 8
+
+csr = synthetic_embedding_csr(320, 96, 10, "gamma", 0)
+x = np.random.default_rng(1).standard_normal(96).astype(np.float32)
+xs = np.random.default_rng(2).standard_normal((6, 96)).astype(np.float32)
+rng = np.random.default_rng(3)
+def rows(n):
+    out = []
+    for _ in range(n):
+        c = np.sort(rng.choice(96, size=10, replace=False))
+        out.append((c.astype(np.int32),
+                    rng.standard_normal(10).astype(np.float32)))
+    return out
+
+for layout in ("fused", "split"):
+    cfg = TopKSpMVConfig(big_k=16, k=8, num_partitions=8, block_size=64,
+                         stream_layout=layout)
+    single = MutableTopKSpMVIndex(csr, cfg)
+    mesh = make_serving_mesh(n_shards=4, n_replicas=2)
+    sharded = ShardedTopKSpMVIndex(csr, cfg, mesh=mesh)
+    assert sharded.dispatch_info()["path"] == "spmd"
+    eq = lambda a, b: (np.array_equal(np.asarray(a[0]), np.asarray(b[0]))
+                       and np.array_equal(np.asarray(a[1]), np.asarray(b[1])))
+    assert eq(sharded.query(jnp.asarray(x)), topk_spmv(single, jnp.asarray(x)))
+    assert eq(sharded.query_batched(jnp.asarray(xs)),
+              topk_spmv_batched(single, jnp.asarray(xs))), layout
+    for cycle in range(3):
+        b = rows(3)
+        assert single.add_rows(b) == sharded.add_rows(b)
+        single.delete_rows([cycle * 7 + 1]); sharded.delete_rows([cycle*7+1])
+        assert eq(sharded.query(jnp.asarray(x)),
+                  topk_spmv(single, jnp.asarray(x))), (layout, cycle)
+    info = sharded.dispatch_info()
+    assert info["retraces"] <= 1, info["retraces"]  # the one bucket jump
+    assert info["topology"]["mesh_axes"] == {"replica": 2, "shard": 4}
+
+# non-power-of-two shard axis exercises the all_gather merge fallback
+mesh3 = make_serving_mesh(n_shards=3, n_replicas=1,
+                          devices=jax.devices()[:3])
+cfg = TopKSpMVConfig(big_k=16, k=8, num_partitions=9, block_size=64)
+single = MutableTopKSpMVIndex(csr, cfg)
+sharded = ShardedTopKSpMVIndex(csr, cfg, mesh=mesh3)
+v, r = sharded.query(jnp.asarray(x))
+rv, rr = topk_spmv(single, jnp.asarray(x))
+assert np.array_equal(np.asarray(v), np.asarray(rv))
+assert np.array_equal(np.asarray(r), np.asarray(rr))
+print("SHARDED_MULTIDEV_OK")
+"""
+
+    def test_mesh_8dev(self):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                         "src")
+        out = subprocess.run([sys.executable, "-c", self.CODE], env=env,
+                             capture_output=True, text=True, timeout=600)
+        assert "SHARDED_MULTIDEV_OK" in out.stdout, out.stderr[-3000:]
+
+
+class TestFacade:
+    """SparseEmbeddingIndex / serve-layer integration."""
+
+    def test_similarity_index_sharded(self):
+        rng = np.random.default_rng(0)
+        from repro.core.similarity import SparseEmbeddingIndex
+
+        emb = rng.standard_normal((96, 40)).astype(np.float32)
+        a = SparseEmbeddingIndex.from_dense(emb, nnz_per_row=8)
+        b = SparseEmbeddingIndex.from_dense(emb, nnz_per_row=8, n_shards=4)
+        assert b.is_sharded and not a.is_sharded
+        q = rng.standard_normal(40).astype(np.float32)
+        assert_same(b.query(q), a.query(q))
+        new = rng.standard_normal((4, 40)).astype(np.float32)
+        assert np.array_equal(a.upsert(new), b.upsert(new))
+        a.delete([3]); b.delete([3])
+        assert_same(b.query(q), a.query(q))
+        sa, sb = a.stats(), b.stats()
+        assert (sa.n_rows, sa.nnz, sa.deleted_rows) == \
+            (sb.n_rows, sb.nnz, sb.deleted_rows)
+        assert b.dispatch_info()["topology"]["n_shards"] == 4
+
+    def test_topk_head_sharded(self):
+        rng = np.random.default_rng(1)
+        from repro.serve.topk_head import ApproxTopKHead, TopKHeadConfig
+
+        emb = rng.standard_normal((64, 40)).astype(np.float32)
+        base = TopKHeadConfig(big_k=16, k=4, num_partitions=8, nnz_per_row=8)
+        h1 = ApproxTopKHead(emb, base)
+        h2 = ApproxTopKHead(
+            emb, TopKHeadConfig(big_k=16, k=4, num_partitions=8,
+                                nnz_per_row=8, n_shards=2))
+        q = rng.standard_normal(40).astype(np.float32)
+        assert_same(h2.topk_logits(q), h1.topk_logits(q))
+        assert h2.dispatch_info()["path"] == "per_shard"
