@@ -1,0 +1,169 @@
+"""Recovery-path perf: checkpoint save, load+WAL-replay, shard failover.
+
+A crash-safe serving plane is only deployable if its recovery costs are
+known: how long a checkpoint blocks ingest, how long a cold process takes
+to get back to bit-identical serving (load + WAL-tail replay, as a function
+of the tail length), and how long shard failover + re-pin takes relative to
+a steady-state query.  This bench measures all three on a synthetic
+collection:
+
+* ``checkpoint_ms`` — ``DurableIndexStore.checkpoint(index)`` wall time
+  (atomic tmp+fsync+rename of the full exported state) and the on-disk size.
+* ``recover_ms`` vs WAL-tail length — ``store.recover()`` at 0, R and 2R
+  pending records; every recovery is asserted bit-identical to the live
+  index before it counts.
+* ``failover`` — time from a killed shard dispatch to a degraded answer,
+  and ``recover_shard`` + first re-pinned query back at full coverage
+  (asserted bit-identical to the pre-failure answer).
+
+Results merge into ``BENCH_topk_spmv.json`` under ``recovery``.
+``smoke=True`` (CI) runs the same assertions at tiny scale, no json write.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+import jax.numpy as jnp
+
+try:
+    from benchmarks.bench_io import merge_into_bench_json, time_call
+except ImportError:  # direct script run: benchmarks/ itself is sys.path[0]
+    from bench_io import merge_into_bench_json, time_call
+
+from repro.core import FaultPlan, bscsr, synthetic_embedding_csr
+from repro.core.persistence import DurableIndexStore
+from repro.core.sharded import ShardedTopKSpMVIndex
+from repro.core.topk_spmv import MutableTopKSpMVIndex, TopKSpMVConfig, topk_spmv
+
+K = 8
+BIG_K = 8
+
+
+def _random_rows(rng, n, n_cols, nnz):
+    out = []
+    for _ in range(n):
+        cols = np.sort(rng.choice(n_cols, size=nnz, replace=False))
+        vals = rng.standard_normal(nnz).astype(np.float32)
+        vals[vals == 0.0] = 0.5
+        out.append((cols.astype(np.int32), vals))
+    return out
+
+
+def _assert_identical(a, b, x):
+    va, ra = topk_spmv(a, jnp.asarray(x), use_kernel=False)
+    vb, rb = topk_spmv(b, jnp.asarray(x), use_kernel=False)
+    assert np.array_equal(np.asarray(va), np.asarray(vb)), "recovery drifted"
+    assert np.array_equal(np.asarray(ra), np.asarray(rb)), "recovery drifted"
+
+
+def measure(n_rows, n_cols, mean_nnz, cores, block, wal_batch, verbose,
+            repeats=3):
+    rng = np.random.default_rng(0)
+    csr = synthetic_embedding_csr(n_rows, n_cols, mean_nnz, "gamma", seed=1)
+    cfg = TopKSpMVConfig(big_k=BIG_K, k=32, num_partitions=cores,
+                         block_size=block)
+    index = MutableTopKSpMVIndex(csr, cfg)
+    x = rng.standard_normal(n_cols).astype(np.float32)
+    root = tempfile.mkdtemp(prefix="bench_recovery_")
+    out = {"n_rows": n_rows, "n_cols": n_cols, "mean_nnz": mean_nnz}
+    try:
+        store = DurableIndexStore(root)
+
+        # -- checkpoint save ------------------------------------------------
+        t_ckpt = time_call(lambda: store.checkpoint(index), repeats=repeats)
+        ckpt = store.load_checkpoint()  # warm the load path + validate
+        _assert_identical(index, ckpt, x)
+        size = sum(
+            p.stat().st_size for p in store.root.rglob("*") if p.is_file()
+        )
+        out["checkpoint_ms"] = t_ckpt * 1e3
+        out["checkpoint_bytes"] = int(size)
+        if verbose:
+            print(f"  checkpoint: {t_ckpt * 1e3:8.2f} ms   "
+                  f"{size / 1e6:.2f} MB on disk")
+
+        # -- recover vs WAL-tail length -------------------------------------
+        out["recover_ms"] = {}
+        for tail in (0, wal_batch, 2 * wal_batch):
+            store.checkpoint(index)
+            for _ in range(tail):
+                batch = _random_rows(rng, 1, n_cols, mean_nnz)
+                store.log_add(batch)
+                index.add_rows(batch)
+            back, replayed = store.recover()
+            assert replayed == tail
+            _assert_identical(index, back, x)
+            t_rec = time_call(lambda: store.recover(), repeats=repeats)
+            out["recover_ms"][str(tail)] = t_rec * 1e3
+            if verbose:
+                print(f"  recover (tail={tail:3d}): {t_rec * 1e3:8.2f} ms")
+
+        # -- shard failover + recovery --------------------------------------
+        shards = 2
+        sh_cfg = TopKSpMVConfig(
+            big_k=BIG_K, k=32, block_size=block,
+            num_partitions=max(cores, shards) // shards * shards,
+        )
+        live, _ = index.live_csr()
+        sharded = ShardedTopKSpMVIndex(live, sh_cfg, n_shards=shards)
+        v0, r0 = sharded.query(x, use_kernel=False)
+        v0, r0 = np.asarray(v0), np.asarray(r0)
+
+        t0 = time.perf_counter()
+        with FaultPlan({"dispatch.shard": 0}):
+            sharded.query(x, use_kernel=False)
+        t_degraded = time.perf_counter() - t0
+        assert sharded.last_query_degraded
+
+        t0 = time.perf_counter()
+        sharded.recover_shard(0)
+        v1, r1 = sharded.query(x, use_kernel=False)
+        t_recover = time.perf_counter() - t0
+        assert np.array_equal(np.asarray(v1), v0)
+        assert np.array_equal(np.asarray(r1), r0)
+        t_steady = time_call(
+            lambda: sharded.query(x, use_kernel=False), repeats=repeats
+        )
+        out["failover"] = {
+            "degraded_answer_ms": t_degraded * 1e3,
+            "recover_and_repin_ms": t_recover * 1e3,
+            "steady_query_ms": t_steady * 1e3,
+        }
+        if verbose:
+            print(f"  failover: degraded answer {t_degraded * 1e3:.2f} ms, "
+                  f"recover+repin {t_recover * 1e3:.2f} ms "
+                  f"(steady query {t_steady * 1e3:.2f} ms)")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return out
+
+
+def run(verbose: bool = True, smoke: bool = False):
+    if smoke:
+        res = measure(n_rows=512, n_cols=64, mean_nnz=8, cores=4, block=32,
+                      wal_batch=8, verbose=verbose, repeats=1)
+        return {
+            "name": "bench_recovery",
+            "us_per_call": res["recover_ms"]["8"] * 1e3,
+            "derived": f"ckpt={res['checkpoint_ms']:.1f}ms",
+        }
+    res = measure(n_rows=8192, n_cols=256, mean_nnz=16, cores=8, block=256,
+                  wal_batch=64, verbose=verbose)
+    merge_into_bench_json(res, section="recovery")
+    tail = res["recover_ms"]["64"]
+    return {
+        "name": "bench_recovery",
+        "us_per_call": tail * 1e3,
+        "derived": (f"ckpt={res['checkpoint_ms']:.1f}ms "
+                    f"failover={res['failover']['recover_and_repin_ms']:.1f}ms"),
+    }
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(smoke="--smoke" in sys.argv[1:])

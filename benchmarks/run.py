@@ -20,6 +20,7 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 def main(smoke: bool = False) -> None:
     from benchmarks import (
         bench_kernel_paths,
+        bench_recovery,
         bench_sharded_serving,
         bench_streaming_updates,
         fig5_throughput,
@@ -32,13 +33,13 @@ def main(smoke: bool = False) -> None:
 
     if smoke:
         mods = [bench_kernel_paths, bench_streaming_updates,
-                bench_sharded_serving]
+                bench_sharded_serving, bench_recovery]
         kwargs, banner = {"smoke": True}, " [smoke]"
     else:
         mods = [table1_precision, table2_designs, fig5_throughput,
                 fig6_roofline, fig7_accuracy, kernel_validation,
                 bench_kernel_paths, bench_streaming_updates,
-                bench_sharded_serving]
+                bench_sharded_serving, bench_recovery]
         kwargs, banner = {}, ""
     rows = []
     for mod in mods:

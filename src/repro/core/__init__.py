@@ -7,12 +7,14 @@ from repro.core.bscsr import (
     synthetic_embedding_csr,
     sparsify_topm,
 )
+from repro.core.faults import FaultInjected, FaultPlan, INJECTION_POINTS
 from repro.core.partition import (
     PartitionPlan,
     merge_topk,
     tree_merge_topk,
     tree_merge_topk_batched,
 )
+from repro.core.persistence import DurableIndexStore, WriteAheadLog
 from repro.core.sharded import ShardedTopKSpMVIndex
 from repro.core.precision_model import (
     expected_precision,

@@ -77,6 +77,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core import bscsr as bscsr_lib
+from repro.core import faults as faults_lib
 from repro.core import partition as partition_lib
 # Direct-from imports: the package __init__ re-binds the ``topk_spmv``
 # attribute to the function of the same name, so the module object is not
@@ -205,6 +206,9 @@ class ShardedTopKSpMVIndex:
                 self._live[gid] = (i, lid)
         self._next_gid = csr.shape[0]
         self._deleted: set = set()
+        self._dead_shards: set = set()  # failed dispatch -> degraded serving
+        self.failovers = 0              # shards ever marked dead
+        self.last_query_degraded = False
         self._version = 0
         self._generation = 0          # bumped by compact(): shard-version
                                       # counters restart, caches must not alias
@@ -267,6 +271,20 @@ class ShardedTopKSpMVIndex:
         for sh in self._shards:
             out.extend(sh.partition_formats)
         return tuple(out)
+
+    @property
+    def n_cols(self) -> int:
+        """Feature dimension (embedding width) of the collection."""
+        return self._shards[0].n_cols
+
+    @property
+    def live_shard_fraction(self) -> float:
+        """Fraction of shards currently serving (1.0 = full coverage)."""
+        return (self.n_shards - len(self._dead_shards)) / self.n_shards
+
+    @property
+    def dead_shards(self) -> tuple:
+        return tuple(sorted(self._dead_shards))
 
     @property
     def snapshot_buffers(self) -> int:
@@ -543,6 +561,14 @@ class ShardedTopKSpMVIndex:
         is device-pinned, so the steady-state loop is S compiled calls and
         one compiled merge: zero host->device transfers, zero retraces
         until a shard's bucket doubles.
+
+        **Failover:** a shard whose dispatch raises is marked dead and its
+        pool dropped from the merge — ``merge_topk``'s sentinel
+        normalisation makes an absent pool merge-safe, so the survivors'
+        answer is exactly the full answer restricted to their rows.
+        Queries then serve **degraded** (``last_query_degraded`` /
+        ``live_shard_fraction``) until :meth:`recover_shard` re-pins the
+        shard from its intact host copy.
         """
         ex = query_executor(self._local_config)
         path = "kernel" if use_kernel else "reference"
@@ -552,6 +578,8 @@ class ShardedTopKSpMVIndex:
         merge_dev = self._merge_device()
         pools_v, pools_r = [], []
         for s, sh in enumerate(self._shards):
+            if s in self._dead_shards:
+                continue
             dev = self._shard_device(s)
             kw = dict(
                 path=path, stream_layout=layout,
@@ -559,17 +587,45 @@ class ShardedTopKSpMVIndex:
                 row_map_key=("l2g", self._generation),
                 device=dev, n_rows=self._gsent_scalar(dev),
             )
-            if batched:
-                v, r = ex.query_batched(x, sh.packed, **kw)
-            else:
-                v, r = ex.query(x, sh.packed, **kw)
+            try:
+                faults_lib.fault_point("dispatch.shard")
+                if batched:
+                    v, r = ex.query_batched(x, sh.packed, **kw)
+                else:
+                    v, r = ex.query(x, sh.packed, **kw)
+            except Exception:
+                self._dead_shards.add(s)
+                self.failovers += 1
+                continue
             if dev is not None and dev != merge_dev:
                 v = jax.device_put(v, merge_dev)   # device-to-device, big_k
                 r = jax.device_put(r, merge_dev)   # floats/int32 per shard
             pools_v.append(v)
             pools_r.append(r)
-        merge = _host_merge_fn(self.n_shards, self.config.big_k, batched)
+        self.last_query_degraded = bool(self._dead_shards)
+        if not pools_v:
+            raise RuntimeError(
+                "all shards failed dispatch — no pools to merge (recover "
+                "with recover_shard() or rebuild from a checkpoint)"
+            )
+        merge = _host_merge_fn(len(pools_v), self.config.big_k, batched)
         return merge(self._gsent_scalar(merge_dev), *pools_v, *pools_r)
+
+    def recover_shard(self, s: int) -> None:
+        """Return a dead shard to serving, re-pinned from its host copy.
+
+        The shard-local index (host arrays) survives a device/dispatch
+        failure untouched — mutations keep applying to it while the shard
+        is dead.  Recovery evicts the shard's device-cache pins (so the
+        next dispatch re-places fresh copies of the CURRENT snapshot) and
+        clears the dead mark.  If the host copy were lost too, rebuild the
+        whole index from a ``DurableIndexStore`` checkpoint instead.
+        """
+        if not (0 <= s < self.n_shards):
+            raise ValueError(f"shard {s} out of range (0..{self.n_shards - 1})")
+        executor_lib.evict_snapshot(self._shards[s].packed.uid)
+        self._dead_shards.discard(s)
+        self.last_query_degraded = bool(self._dead_shards)
 
     def dispatch_info(self) -> dict:
         """Topology + per-shard serving counters (docs/SERVING.md)."""
@@ -586,6 +642,12 @@ class ShardedTopKSpMVIndex:
                 ),
             },
             "churn_stable": self.config.churn_stable,
+            "health": {
+                "dead_shards": list(self.dead_shards),
+                "live_shard_fraction": self.live_shard_fraction,
+                "failovers": self.failovers,
+                "last_query_degraded": self.last_query_degraded,
+            },
             "per_shard": [
                 {
                     "version": sh.version,

@@ -93,6 +93,51 @@ class SparseEmbeddingIndex:
     def is_sharded(self) -> bool:
         return isinstance(self.index, sharded_lib.ShardedTopKSpMVIndex)
 
+    @property
+    def n_cols(self) -> int:
+        """Feature dimension served by the backing index."""
+        return self.index.n_cols
+
+    @classmethod
+    def from_index(
+        cls,
+        index,
+        nnz_per_row: int = 32,
+    ) -> "SparseEmbeddingIndex":
+        """Wrap an already-built backing index — the recovery constructor.
+
+        ``persistence.DurableIndexStore.recover()`` returns a bare
+        ``MutableTopKSpMVIndex``; this re-attaches the service facade to it
+        without re-encoding anything (the restored snapshot keeps serving
+        bit-identically).
+        """
+        obj = cls.__new__(cls)
+        obj.config = index.config
+        obj.nnz_per_row = nnz_per_row
+        obj.index = index
+        csr, _ = index.live_csr()
+        obj.csr = csr
+        return obj
+
+    def _validate_query(self, x: np.ndarray, batched: bool) -> None:
+        x = np.asarray(x)
+        want = 2 if batched else 1
+        shape_name = "(Q, M) batch" if batched else "(M,) vector"
+        if x.ndim != want:
+            raise ValueError(
+                f"query must be a {want}-D {shape_name}, got shape {x.shape}"
+            )
+        if x.shape[-1] != self.n_cols:
+            raise ValueError(
+                f"query width {x.shape[-1]} != index feature dim "
+                f"{self.n_cols}"
+            )
+        if not np.all(np.isfinite(np.asarray(x, np.float32))):
+            raise ValueError(
+                "query contains non-finite values (NaN/Inf) — scores would "
+                "be meaningless; sanitize upstream"
+            )
+
     @classmethod
     def from_dense(
         cls,
@@ -114,6 +159,7 @@ class SparseEmbeddingIndex:
         self, x: np.ndarray, use_kernel: bool = True
     ) -> Tuple[np.ndarray, np.ndarray]:
         """Top-K (scores, row ids) for one dense query embedding."""
+        self._validate_query(x, batched=False)
         if self.is_sharded:
             v, r = self.index.query(
                 jnp.asarray(x, jnp.float32), use_kernel=use_kernel
@@ -141,6 +187,7 @@ class SparseEmbeddingIndex:
         On real TPU silicon pass ``use_kernel=True`` to get the one-pass
         stream amortization the kernel exists for.
         """
+        self._validate_query(xs, batched=True)
         if self.is_sharded:
             v, r = self.index.query_batched(
                 jnp.asarray(xs, jnp.float32), use_kernel=use_kernel
@@ -178,10 +225,16 @@ class SparseEmbeddingIndex:
         tile-packets — no re-encode of the existing stream.
         """
         embeddings = np.atleast_2d(np.asarray(embeddings, np.float32))
-        if embeddings.shape[1] != self.csr.shape[1]:
+        if embeddings.shape[1] != self.n_cols:
             raise ValueError(
                 f"embedding width {embeddings.shape[1]} != index width "
-                f"{self.csr.shape[1]}"
+                f"{self.n_cols}"
+            )
+        if not np.all(np.isfinite(embeddings)):
+            raise ValueError(
+                "upsert embeddings contain non-finite values (NaN/Inf) — "
+                "they would poison the quantization calibration and every "
+                "score they touch; sanitize upstream"
             )
         m_keep = min(nnz_per_row or self.nnz_per_row, embeddings.shape[1])
         sparse = bscsr_lib.sparsify_topm(embeddings, m_keep)

@@ -21,6 +21,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import adaptive as adaptive_lib
 from repro.core import bscsr as bscsr_lib
+from repro.core import faults as faults_lib
 from repro.core import partition as partition_lib
 from repro.core.precision_model import expected_precision, min_partitions_for_precision
 from repro.core.quantization import F32, FORMATS, width_class_of
@@ -287,8 +288,21 @@ class MutableTopKSpMVIndex:
 
     # -- snapshot bookkeeping ------------------------------------------------
 
-    def _refresh(self) -> None:
+    def _refresh(self, preserve_caps: bool = False) -> None:
         """Swap in a fresh immutable snapshot (bumps the version counter).
+
+        ``preserve_caps`` is the checkpoint-restore mode: the churn-stable
+        packet / width-class caps were restored verbatim from the manifest
+        and must be used as-is (neither re-anchored nor re-bucketed), so a
+        recovered index reproduces the crashed process's padded shapes —
+        and therefore its executor signature — exactly.
+
+        Crash atomicity: everything below builds into locals; the served
+        ``self._packed`` is replaced by ONE assignment at the very end.  A
+        failure anywhere before the swap (see the ``faults.fault_point``
+        hooks) leaves the previous snapshot serving bit-identically, and a
+        retry of :meth:`refresh` converges — the padded-stream cache and
+        COW leases are idempotent given unchanged stream state.
 
         Incremental by default: padded per-partition streams (and, for the
         fused layout, their fused word forms) are cached, so only partitions
@@ -354,7 +368,9 @@ class MutableTopKSpMVIndex:
             # stream as a continuation of the open sentinel row
             # (answer-preserving; <= 2x stream bytes worst case, reclaimed
             # by the next compact()).
-            if self._packet_cap < 0:
+            if preserve_caps and self._packet_cap >= 0:
+                pass  # checkpoint restore: the saved cap is authoritative
+            elif self._packet_cap < 0:
                 self._packet_cap = max_p          # anchor refresh: exact
             else:                                 # mutation refresh: bucket
                 self._packet_cap = max(
@@ -373,6 +389,8 @@ class MutableTopKSpMVIndex:
         self._dirty = set()
         self.last_refresh_repadded = len(dirty)
         self.total_repadded += len(dirty)
+        # Mid-COW-rewrite: padded streams rebuilt, stacked buffers not yet.
+        faults_lib.fault_point("refresh.cow_rewrite")
 
         # Mixed-precision plane: per-width-class tagged fused groups.  Each
         # class pads to its OWN packet cap (anchor-then-bucket, like
@@ -393,7 +411,9 @@ class MutableTopKSpMVIndex:
                 p = max(-(-n.num_packets // mult) * mult, mult)
                 nat[cname] = max(nat.get(cname, 0), p)
             if self.config.churn_stable:
-                if self._class_caps is None:
+                if preserve_caps and self._class_caps is not None:
+                    pass  # checkpoint restore: saved class caps authoritative
+                elif self._class_caps is None:
                     self._class_caps = dict(nat)      # anchor refresh: exact
                 else:                                 # mutation refresh: bucket
                     for cname, p in nat.items():
@@ -486,7 +506,7 @@ class MutableTopKSpMVIndex:
                 max_p,
                 packets_multiple=mult,
             )
-            self._packed = kernel_ops.PackedPartitions(
+            new_packed = kernel_ops.PackedPartitions(
                 vals=buf.view("vals"),
                 cols=buf.view("cols"),
                 flags=buf.view("flags"),
@@ -499,10 +519,10 @@ class MutableTopKSpMVIndex:
                 words=buf.view("words") if fused else None,
                 **segment_fields,
             )
-            buf.attach(self._packed)
+            buf.attach(new_packed)
         else:
             copied = len(self._padded_streams)  # np.stack copies everything
-            self._packed = kernel_ops.stack_padded_streams(
+            new_packed = kernel_ops.stack_padded_streams(
                 self._padded_streams,
                 self._plan,
                 self._n_cols,
@@ -512,16 +532,37 @@ class MutableTopKSpMVIndex:
                 **segment_fields,
             )
         for gbuf in group_bufs:
-            gbuf.attach(self._packed)
+            gbuf.attach(new_packed)
+        # Mid-atomic-swap: the fresh snapshot exists, the served one is
+        # still the old one.  A failure here drops ``new_packed`` (its
+        # buffer lease releases via weakref) without tearing the old
+        # snapshot; the swap below is a single reference assignment.
+        faults_lib.fault_point("refresh.swap")
+        self._packed = new_packed
         self.last_refresh_group_copied = group_copied
         self.total_group_copied += group_copied
         self.last_refresh_copied = copied
         self.total_copied += copied
         self._version += 1
 
+    def refresh(self) -> None:
+        """Rebuild + swap the serving snapshot.
+
+        The retry entry point after an *interrupted* refresh (a crash or
+        injected fault between a mutation landing and the snapshot swap):
+        mutations already applied to the stream state are picked up and the
+        swap converges — see the crash-atomicity note on :meth:`_refresh`.
+        """
+        self._refresh()
+
     @property
     def packed(self) -> kernel_ops.PackedPartitions:
         return self._packed
+
+    @property
+    def n_cols(self) -> int:
+        """Feature dimensionality of the indexed collection."""
+        return self._n_cols
 
     @property
     def version(self) -> int:
@@ -761,24 +802,32 @@ class MutableTopKSpMVIndex:
         else:
             streams = [encode(p) for p in parts]
         self.last_compact_parallel = parallel
+        new_fmts = new_calib = new_exact = new_native = None
         if self._part_fmts is not None:
             # Full re-assignment (the only place formats may DEMOTE): fresh
             # calibration over the live collection, then rebuild the
             # exact/native/twin planes.  ``self._fmt`` is F32 here, so the
             # parallel-encoded ``streams`` already are the exact plane.
-            fmt_plan, calib = adaptive_lib.assign_partition_formats(
+            fmt_plan, new_calib = adaptive_lib.assign_partition_formats(
                 csr, plan.num_partitions, self.config.recall_target,
                 k=self.config.k, n_queries=self.config.calibration_queries,
                 seed=self.config.calibration_seed,
             )
-            self._part_fmts = list(fmt_plan.formats)
-            self._calib = calib
-            self._exact = streams
-            self._native = [
+            new_fmts = list(fmt_plan.formats)
+            new_exact = streams
+            new_native = [
                 bscsr_lib.requantize_stream(e, FORMATS[f])
-                for e, f in zip(self._exact, self._part_fmts)
+                for e, f in zip(new_exact, new_fmts)
             ]
-            streams = [bscsr_lib.dequantize_stream(n) for n in self._native]
+            streams = [bscsr_lib.dequantize_stream(n) for n in new_native]
+        # Everything above built into locals; a failure up to here leaves
+        # the index (and its served snapshot) untouched.
+        faults_lib.fault_point("compact.swap")
+        if self._part_fmts is not None:
+            self._part_fmts = new_fmts
+            self._calib = new_calib
+            self._exact = new_exact
+            self._native = new_native
         self._streams = streams
         self._base_packets = max(e.num_packets for e in streams)
         self._plan = plan
@@ -796,6 +845,212 @@ class MutableTopKSpMVIndex:
         self._dead_nnz = 0
         self._tombstone_slots = 0
         self._refresh()
+
+    # -- durable state (core/persistence.py writes/reads this) ---------------
+
+    def export_state(self) -> Tuple[dict, dict]:
+        """Full logical + stream state as (json-able meta, named arrays).
+
+        Captures everything :meth:`from_state` needs to reproduce this index
+        *bit-identically* — including the churn-stable packet / slot / class
+        caps, so the restored snapshot keeps the crashed process's padded
+        shapes and therefore its executor signature (zero-retrace resume).
+
+        Heterogeneous (``recall_target``) indexes serialize only the exact
+        F32 plane plus the format vector and calibration: the native and
+        twin planes are bit-exact functions of those
+        (``requantize_stream`` / ``dequantize_stream``).
+        """
+        hetero = self._part_fmts is not None
+        plane = self._exact if hetero else self._streams
+        arrays: dict = {}
+        stream_meta = []
+        for ci, s in enumerate(plane):
+            arrays[f"s{ci}_vals"] = s.vals
+            arrays[f"s{ci}_cols"] = s.cols
+            arrays[f"s{ci}_flags"] = s.flags
+            stream_meta.append(
+                {"n_rows": int(s.n_rows), "nnz": int(s.nnz),
+                 "fmt": s.value_format.name}
+            )
+        arrays["slot_lens"] = np.asarray(
+            [len(s) for s in self._slots], np.int64
+        )
+        arrays["slots"] = np.asarray(
+            [g for slots in self._slots for g in slots], np.int64
+        )
+        gids = np.asarray(sorted(self._rows), np.int64)
+        arrays["row_gids"] = gids
+        arrays["row_lens"] = np.asarray(
+            [len(self._rows[g][0]) for g in gids], np.int64
+        )
+        if gids.size:
+            arrays["row_cols"] = np.concatenate(
+                [self._rows[g][0] for g in gids]
+            ).astype(np.int32)
+            arrays["row_vals"] = np.concatenate(
+                [self._rows[g][1] for g in gids]
+            ).astype(np.float32)
+        else:
+            arrays["row_cols"] = np.zeros(0, np.int32)
+            arrays["row_vals"] = np.zeros(0, np.float32)
+        self._deleted.grow(self._next_gid)
+        arrays["deleted"] = self._deleted.bits[: max(self._next_gid, 1)].copy()
+        calib_meta = None
+        if self._calib is not None:
+            c = self._calib
+            arrays["calib_queries"] = c.queries
+            arrays["calib_thresholds"] = c.thresholds
+            arrays["calib_losses"] = c.losses
+            for fname, arr in c.quant_thresholds.items():
+                arrays[f"calib_qt_{fname}"] = arr
+            calib_meta = {
+                "k": int(c.k), "budget": float(c.budget),
+                "quant_fmts": sorted(c.quant_thresholds),
+            }
+        meta = {
+            "schema": 1,
+            "config": dataclasses.asdict(self.config),
+            "n_cols": int(self._n_cols),
+            "plan_rows": int(self._plan.n_rows),
+            "plan_partitions": int(self._plan.num_partitions),
+            "next_gid": int(self._next_gid),
+            "live_nnz": int(self._live_nnz),
+            "delta_nnz": int(self._delta_nnz),
+            "dead_nnz": int(self._dead_nnz),
+            "tombstone_slots": int(self._tombstone_slots),
+            "base_packets": int(self._base_packets),
+            "version": int(self._version),
+            "packet_cap": int(self._packet_cap),
+            "class_caps": (
+                {k: int(v) for k, v in self._class_caps.items()}
+                if self._class_caps is not None else None
+            ),
+            "part_fmts": (
+                list(self._part_fmts) if self._part_fmts is not None else None
+            ),
+            "streams": stream_meta,
+            "calib": calib_meta,
+        }
+        return meta, arrays
+
+    @classmethod
+    def from_state(cls, meta: dict, arrays: dict) -> "MutableTopKSpMVIndex":
+        """Reconstruct an index from :meth:`export_state` output.
+
+        The restored snapshot answers queries bit-identically to the
+        exported one (streams, slots, tombstones, formats and padded
+        shapes all round-trip), so a process resuming from a checkpoint
+        re-pins the same executor signature with zero retraces.
+        """
+        if meta.get("schema") != 1:
+            raise ValueError(f"unsupported state schema: {meta.get('schema')}")
+        config = TopKSpMVConfig(**meta["config"])
+        hetero = meta["part_fmts"] is not None
+        obj = cls.__new__(cls)
+        obj.config = config
+        obj._n_cols = int(meta["n_cols"])
+        obj._fmt = F32 if hetero else FORMATS[config.value_format]
+        obj._plan = partition_lib.PartitionPlan.build(
+            meta["plan_rows"], meta["plan_partitions"]
+        )
+        plane = []
+        for ci, sm in enumerate(meta["streams"]):
+            plane.append(bscsr_lib.BSCSRMatrix(
+                vals=arrays[f"s{ci}_vals"],
+                cols=arrays[f"s{ci}_cols"],
+                flags=arrays[f"s{ci}_flags"],
+                n_rows=int(sm["n_rows"]),
+                n_cols=obj._n_cols,
+                nnz=int(sm["nnz"]),
+                block_size=config.block_size,
+                value_format=FORMATS[sm["fmt"]],
+            ))
+        obj.last_refresh_promoted = 0
+        obj._part_fmts = None
+        obj._calib = None
+        obj._exact = None
+        obj._native = None
+        if hetero:
+            obj._part_fmts = list(meta["part_fmts"])
+            obj._exact = plane
+            obj._native = [
+                bscsr_lib.requantize_stream(e, FORMATS[f])
+                for e, f in zip(obj._exact, obj._part_fmts)
+            ]
+            obj._streams = [
+                bscsr_lib.dequantize_stream(n) for n in obj._native
+            ]
+            if meta["calib"] is not None:
+                cm = meta["calib"]
+                obj._calib = adaptive_lib.PrecisionCalibration(
+                    queries=arrays["calib_queries"],
+                    thresholds=arrays["calib_thresholds"],
+                    k=int(cm["k"]),
+                    budget=float(cm["budget"]),
+                    losses=np.array(arrays["calib_losses"]),
+                    quant_thresholds={
+                        f: arrays[f"calib_qt_{f}"] for f in cm["quant_fmts"]
+                    },
+                )
+        else:
+            obj._streams = plane
+        obj._base_packets = int(meta["base_packets"])
+        slot_lens = arrays["slot_lens"]
+        flat_slots = arrays["slots"]
+        obj._slots = []
+        off = 0
+        for ln in slot_lens:
+            obj._slots.append([int(g) for g in flat_slots[off: off + int(ln)]])
+            off += int(ln)
+        invalid = int(bscsr_lib.INVALID_ROW)
+        obj._loc = {
+            gid: (ci, si)
+            for ci, slots in enumerate(obj._slots)
+            for si, gid in enumerate(slots)
+            if gid != invalid
+        }
+        gids = arrays["row_gids"]
+        lens = arrays["row_lens"]
+        starts = np.concatenate([[0], np.cumsum(lens)]).astype(np.int64)
+        obj._rows = {
+            int(g): (
+                arrays["row_cols"][starts[i]: starts[i + 1]],
+                arrays["row_vals"][starts[i]: starts[i + 1]],
+            )
+            for i, g in enumerate(gids)
+        }
+        obj._next_gid = int(meta["next_gid"])
+        obj._deleted = bscsr_lib.TombstoneBitmap(
+            bits=np.array(arrays["deleted"], dtype=bool)
+        )
+        obj._deleted.grow(obj._next_gid)
+        obj._live_nnz = int(meta["live_nnz"])
+        obj._delta_nnz = int(meta["delta_nnz"])
+        obj._dead_nnz = int(meta["dead_nnz"])
+        obj._tombstone_slots = int(meta["tombstone_slots"])
+        obj._version = int(meta["version"]) - 1  # _refresh bumps it back
+        obj._packed = None
+        obj._live_csr_cache = None
+        obj._buffer_pool = kernel_ops.SnapshotBufferPool()
+        obj._stamp_counter = 0
+        obj._reset_padded_cache()
+        obj.last_refresh_repadded = 0
+        obj.total_repadded = 0
+        obj.last_refresh_copied = 0
+        obj.total_copied = 0
+        obj.last_refresh_group_copied = 0
+        obj.total_group_copied = 0
+        obj.last_compact_parallel = False
+        # Restore the churn-stable caps verbatim, then build the snapshot
+        # around them (preserve_caps): same padded shapes as at export.
+        obj._packet_cap = int(meta["packet_cap"])
+        if meta["class_caps"] is not None:
+            obj._class_caps = {
+                k: int(v) for k, v in meta["class_caps"].items()
+            }
+        obj._refresh(preserve_caps=True)
+        return obj
 
 
 def query_executor(config: TopKSpMVConfig) -> executor_lib.QueryExecutor:

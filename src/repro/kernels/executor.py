@@ -64,6 +64,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults as faults_lib
 from repro.core.quantization import FORMATS
 from repro.kernels import ops
 from repro.kernels import ref as ref_lib
@@ -83,6 +84,20 @@ def device_cache_size() -> int:
 
 def clear_device_cache() -> None:
     _DEVICE_CACHE.clear()
+
+
+def evict_snapshot(uid) -> int:
+    """Drop every device pin of snapshot ``uid``; returns entries evicted.
+
+    Shard-failover recovery path: after a dispatch failure the host
+    ``PackedPartitions`` is still good, but its device copies are suspect —
+    evicting forces the next ``device_snapshot`` call to re-place fresh
+    device arrays from the host copy.
+    """
+    stale = [k for k in _DEVICE_CACHE if k[0] == uid]
+    for k in stale:
+        _DEVICE_CACHE.pop(k, None)
+    return len(stale)
 
 
 class DeviceSnapshot:
@@ -666,6 +681,11 @@ class ShardedDeviceBundle:
             blk = np.ascontiguousarray(blocks_fn(s)).astype(
                 np_dtype, copy=False
             )
+            # A crash past this point leaves this shard's version marker
+            # unmoved (it only advances after every device piece is placed),
+            # so the next sync re-ships the shard — device pieces are
+            # replaced functionally, never mutated, making re-ship safe.
+            faults_lib.fault_point("bundle.scatter")
             st_old = fam["stamps"][s]
             st_new = (
                 None if stamps is None or stamps[s] is None

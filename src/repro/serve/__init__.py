@@ -1,3 +1,8 @@
 """Serving substrate: batched KV-cache engine, approximate Top-K heads, and
 the serve-while-ingest streaming similarity service."""
-from repro.serve.streaming import CompactionPolicy, StreamingSimilarityService
+from repro.serve.streaming import (
+    AdmissionError,
+    CompactionPolicy,
+    ServiceGuardrails,
+    StreamingSimilarityService,
+)

@@ -18,15 +18,33 @@ and every ``search``/``ingest``/``delete``/compaction call flows through the
 sharded serving plane unchanged — refreshes ship only the dirty partitions
 to the owning shard's device, and ``dispatch_info()`` reports the topology
 plus per-shard transfer counters (docs/SERVING.md §"Sharded serving").
+
+**Crash safety + guardrails** (docs/SERVING.md §"Failure handling"):
+attaching a :class:`~repro.core.persistence.DurableIndexStore` makes every
+mutation write-ahead logged and every compaction followed by an atomic
+checkpoint (bounding the replay tail); :meth:`StreamingSimilarityService.
+recover` rebuilds a bit-identical service from disk.  A
+:class:`ServiceGuardrails` adds per-call deadlines, bounded
+retry-with-backoff and admission control so one stuck or failing dispatch
+cannot take the whole plane down with it.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
+import time
 from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import bscsr as bscsr_lib
+from repro.core.persistence import DurableIndexStore
 from repro.core.similarity import SimilaritySearchStats, SparseEmbeddingIndex
+from repro.utils.watchdog import DeadlineExceeded, Watchdog
+
+
+class AdmissionError(RuntimeError):
+    """Rejected at the door: the in-flight cap is full (shed, don't queue)."""
 
 
 @dataclasses.dataclass
@@ -38,61 +56,246 @@ class CompactionPolicy:
     padding than a fresh base encode); ``max_tombstone_fraction`` bounds
     retired candidate slots relative to live rows (tombstoned slots still
     flow through the kernel's per-core top-k scratchpad until compaction).
+    ``max_wal_records`` (0 disables) additionally bounds the write-ahead
+    log's replay tail when a ``DurableIndexStore`` is attached — compaction
+    checkpoints, which rotates the WAL, so recovery time stays bounded even
+    under churn that never trips the fraction thresholds.
     """
 
     max_delta_fraction: float = 0.25
     max_tombstone_fraction: float = 0.10
+    max_wal_records: int = 0
 
-    def should_compact(self, stats: SimilaritySearchStats) -> bool:
+    def should_compact(
+        self, stats: SimilaritySearchStats, wal_records: int = 0
+    ) -> bool:
         if stats.delta_fraction > self.max_delta_fraction:
+            return True
+        if self.max_wal_records and wal_records >= self.max_wal_records:
             return True
         return stats.tombstone_count > self.max_tombstone_fraction * max(
             stats.n_rows, 1
         )
 
 
+@dataclasses.dataclass
+class ServiceGuardrails:
+    """Request-plane protection knobs (all disabled by default).
+
+    ``deadline_s`` bounds one ``search`` call's wall clock — a Python
+    thread cannot interrupt an in-flight jax dispatch, so an overdue call
+    raises :class:`~repro.utils.watchdog.DeadlineExceeded` as soon as the
+    dispatch returns instead of handing back a stale answer.
+    ``max_retries``/``backoff_s`` retry transient dispatch failures
+    (exponential backoff: ``backoff_s * 2**attempt``); deadline overruns
+    and invalid inputs are never retried.  ``max_in_flight`` sheds load at
+    the door with :class:`AdmissionError` once that many ``search`` calls
+    are already executing.
+    """
+
+    deadline_s: float = 0.0
+    max_retries: int = 0
+    backoff_s: float = 0.0
+    max_in_flight: int = 0
+
+
 class StreamingSimilarityService:
-    """Facade pairing batched queries with live ingest + auto-compaction."""
+    """Facade pairing batched queries with live ingest + auto-compaction.
+
+    With ``store=`` (a :class:`~repro.core.persistence.DurableIndexStore`)
+    the service becomes crash-safe: mutations are write-ahead logged before
+    they apply, compactions checkpoint (rotating the WAL), and
+    :meth:`recover` rebuilds the service bit-identically from the last
+    checkpoint + WAL tail.  The store requires the single-device backing
+    index (a sharded index recovers shard-by-shard via
+    ``ShardedTopKSpMVIndex.recover_shard`` instead).
+    """
 
     def __init__(
         self,
         index: SparseEmbeddingIndex,
         policy: Optional[CompactionPolicy] = None,
+        guardrails: Optional[ServiceGuardrails] = None,
+        store: Optional[DurableIndexStore] = None,
     ):
         self.index = index
         self.policy = policy or CompactionPolicy()
+        self.guardrails = guardrails or ServiceGuardrails()
+        self.store = store
+        if store is not None and index.is_sharded:
+            raise ValueError(
+                "DurableIndexStore persists a single-device index; a "
+                "sharded plane recovers per shard (recover_shard) or from "
+                "per-shard stores"
+            )
         self.compactions = 0
+        self.checkpoints = 0
         self.queries_served = 0
         self.rows_ingested = 0
         self.rows_deleted = 0
+        self.retries = 0
+        self.failures = 0
+        self.deadline_exceeded = 0
+        self.admission_rejected = 0
+        self.degraded_queries = 0
+        self.replayed_records = 0
+        self.last_search_degraded = False
+        self._in_flight = 0
+        self._flight_lock = threading.Lock()
+        self._compacting = False
+        if store is not None and not store.has_checkpoint:
+            self.checkpoint()  # anchor the WAL: logging needs a base state
+
+    @classmethod
+    def recover(
+        cls,
+        store: DurableIndexStore,
+        policy: Optional[CompactionPolicy] = None,
+        guardrails: Optional[ServiceGuardrails] = None,
+    ) -> "StreamingSimilarityService":
+        """Rebuild the service from disk: last checkpoint + WAL-tail replay.
+
+        The recovered index answers bit-identically to the crashed
+        process's (same streams, same executor signature — resuming costs
+        device re-pins but zero retraces) and keeps logging to the same
+        WAL, so recovery is itself crash-safe.
+        """
+        index, replayed = store.recover()
+        svc = cls(
+            SparseEmbeddingIndex.from_index(index),
+            policy=policy, guardrails=guardrails, store=store,
+        )
+        svc.replayed_records = replayed
+        return svc
+
+    def checkpoint(self) -> None:
+        """Atomically persist the full index state; rotates the WAL."""
+        if self.store is None:
+            raise ValueError("no DurableIndexStore attached")
+        self.store.checkpoint(self.index.index)
+        self.checkpoints += 1
 
     def search(
         self, xs: np.ndarray, use_kernel: bool = False
     ) -> Tuple[np.ndarray, np.ndarray]:
-        """Answer a (Q, M) query batch from the current snapshot."""
-        xs = np.atleast_2d(np.asarray(xs, np.float32))
-        self.queries_served += xs.shape[0]
-        return self.index.query_batch(xs, use_kernel=use_kernel)
+        """Answer a (Q, M) query batch from the current snapshot.
+
+        Guardrails (when enabled): sheds load once ``max_in_flight`` calls
+        are executing, retries transient dispatch failures with exponential
+        backoff, and raises :class:`DeadlineExceeded` instead of returning
+        an answer that outlived ``deadline_s``.
+        """
+        g = self.guardrails
+        with self._flight_lock:
+            if g.max_in_flight and self._in_flight >= g.max_in_flight:
+                self.admission_rejected += 1
+                raise AdmissionError(
+                    f"{self._in_flight} searches already in flight "
+                    f"(max_in_flight={g.max_in_flight})"
+                )
+            self._in_flight += 1
+        try:
+            xs = np.atleast_2d(np.asarray(xs, np.float32))
+            with Watchdog(g.deadline_s, raise_on_timeout=True) as wd:
+                out = self._dispatch_with_retry(xs, use_kernel, wd)
+            self.queries_served += xs.shape[0]
+            self._note_degraded()
+            return out
+        except DeadlineExceeded:
+            self.deadline_exceeded += 1
+            raise
+        finally:
+            with self._flight_lock:
+                self._in_flight -= 1
+
+    def _dispatch_with_retry(self, xs, use_kernel, wd: Watchdog):
+        attempt = 0
+        while True:
+            try:
+                return self.index.query_batch(xs, use_kernel=use_kernel)
+            except (ValueError, DeadlineExceeded):
+                raise               # invalid input / overdue: never retried
+            except Exception:
+                self.failures += 1
+                if attempt >= self.guardrails.max_retries:
+                    raise
+                wd.check()          # don't sleep past an expired deadline
+                if self.guardrails.backoff_s:
+                    time.sleep(self.guardrails.backoff_s * (2 ** attempt))
+                attempt += 1
+                self.retries += 1
+
+    def _note_degraded(self) -> None:
+        backing = self.index.index
+        self.last_search_degraded = bool(
+            getattr(backing, "last_query_degraded", False)
+        )
+        if self.last_search_degraded:
+            self.degraded_queries += 1
 
     def ingest(
         self, embeddings: np.ndarray, ids: Optional[Sequence[int]] = None
     ) -> np.ndarray:
-        """Upsert dense rows (append or replace); may trigger compaction."""
+        """Upsert dense rows (append or replace); may trigger compaction.
+
+        With a store attached the batch is write-ahead logged (as the
+        sparsified rows the index will actually encode) BEFORE it applies,
+        so a crash between log and apply replays to the identical state.
+        """
+        if self.store is not None:
+            rows = self._sparse_rows(embeddings)
+            if ids is None:
+                self.store.log_add(rows)
+            else:
+                self.store.log_replace(list(ids), rows)
         out = self.index.upsert(embeddings, ids=ids)
         self.rows_ingested += len(out)
         self._maybe_compact()
         return out
 
+    def _sparse_rows(self, embeddings: np.ndarray) -> list:
+        """The exact sparse rows ``upsert`` will encode (same top-m path)."""
+        embeddings = np.atleast_2d(np.asarray(embeddings, np.float32))
+        m_keep = min(self.index.nnz_per_row, embeddings.shape[1])
+        sparse = bscsr_lib.sparsify_topm(embeddings, m_keep)
+        return [
+            (
+                sparse.indices[sparse.indptr[i]: sparse.indptr[i + 1]],
+                sparse.data[sparse.indptr[i]: sparse.indptr[i + 1]],
+            )
+            for i in range(sparse.shape[0])
+        ]
+
     def delete(self, ids: Sequence[int]) -> None:
         ids = list(ids)  # a one-shot iterable must not be consumed twice
+        if self.store is not None:
+            self.store.log_delete(ids)
         self.index.delete(ids)
         self.rows_deleted += len(ids)
         self._maybe_compact()
 
     def _maybe_compact(self) -> None:
-        if self.policy.should_compact(self.index.stats()):
+        # Re-entrancy guard: a compaction that failed mid-flight (fault
+        # injection, device loss) must not be re-triggered from inside the
+        # retry/ingest path while the first attempt is still unwinding.
+        if self._compacting:
+            return
+        wal = self.store.wal_records if self.store is not None else 0
+        if not self.policy.should_compact(self.index.stats(), wal_records=wal):
+            return
+        self._compacting = True
+        try:
+            if self.store is not None:
+                # Write-ahead: a crash between the record and the compact
+                # replays the compact — deterministic from the live rows,
+                # so replay converges on the same state either way.
+                self.store.log_compact()
             self.index.compact()
             self.compactions += 1
+            if self.store is not None:
+                self.checkpoint()  # rotate the WAL: bounded replay tail
+        finally:
+            self._compacting = False
 
     def stats(self) -> SimilaritySearchStats:
         return self.index.stats()
@@ -105,5 +308,26 @@ class StreamingSimilarityService:
         refresh re-pins arrays but reuses the compiled query fn) and only
         moves when a signature bucket doubles or ``compact()`` reshapes the
         partition plan — see the retrace table in docs/ARCHITECTURE.md.
+
+        ``service`` adds the request-plane counters (retries, failures,
+        deadline overruns, admission rejects, degraded answers) and the
+        durability state (checkpoints written, WAL replay-tail length).
         """
-        return self.index.dispatch_info()
+        info = self.index.dispatch_info()
+        info["service"] = {
+            "queries_served": self.queries_served,
+            "in_flight": self._in_flight,
+            "retries": self.retries,
+            "failures": self.failures,
+            "deadline_exceeded": self.deadline_exceeded,
+            "admission_rejected": self.admission_rejected,
+            "degraded_queries": self.degraded_queries,
+            "last_search_degraded": self.last_search_degraded,
+            "compactions": self.compactions,
+            "checkpoints": self.checkpoints,
+            "wal_records": (
+                self.store.wal_records if self.store is not None else 0
+            ),
+            "replayed_records": self.replayed_records,
+        }
+        return info

@@ -8,34 +8,18 @@ raises after ``timeout_s`` so the launcher can kill + restart, (c) data loss
 """
 from __future__ import annotations
 
-import threading
-import time
-from typing import Callable, Optional
+from repro.utils.watchdog import DeadlineExceeded, Watchdog
+
+__all__ = ["DeadlineExceeded", "StepWatchdog", "StepTimer", "Watchdog"]
 
 
-class StepWatchdog:
-    """Raises (via callback) if a step exceeds the timeout — straggler guard."""
+class StepWatchdog(Watchdog):
+    """Raises (via callback) if a step exceeds the timeout — straggler guard.
 
-    def __init__(self, timeout_s: float, on_timeout: Optional[Callable] = None):
-        self.timeout_s = timeout_s
-        self.on_timeout = on_timeout or self._default
-        self._timer: Optional[threading.Timer] = None
-        self.fired = False
-
-    def _default(self):
-        self.fired = True
-
-    def __enter__(self):
-        if self.timeout_s > 0:
-            self._timer = threading.Timer(self.timeout_s, self.on_timeout)
-            self._timer.daemon = True
-            self._timer.start()
-        return self
-
-    def __exit__(self, *exc):
-        if self._timer is not None:
-            self._timer.cancel()
-        return False
+    The training-flavored face of the shared :class:`repro.utils.watchdog.
+    Watchdog` (the serving plane arms the same class as a per-request
+    deadline — ``ServiceGuardrails.deadline_s`` in ``serve/streaming.py``).
+    """
 
 
 class StepTimer:

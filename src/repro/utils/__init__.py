@@ -1,0 +1,4 @@
+"""Cross-layer utilities shared by the serving and training planes."""
+from repro.utils.watchdog import DeadlineExceeded, Watchdog
+
+__all__ = ["DeadlineExceeded", "Watchdog"]

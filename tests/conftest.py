@@ -1,7 +1,42 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see 1 real device;
 only launch/dryrun.py forces the 512-device placeholder topology."""
+import os
+import signal
+import threading
+
 import numpy as np
 import pytest
+
+# Global per-test wall-clock ceiling (seconds).  The robustness suites guard
+# against hangs (deadline watchdogs, retry loops, fault-injection recovery),
+# so a regression there tends to wedge rather than fail; SIGALRM turns a
+# wedge into a visible failure.  Implemented in-repo because the
+# pytest-timeout plugin is not part of the pinned environment.
+_TEST_TIMEOUT_S = int(os.environ.get("REPRO_TEST_TIMEOUT", "600"))
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    use_alarm = (
+        _TEST_TIMEOUT_S > 0
+        and hasattr(signal, "SIGALRM")
+        and threading.current_thread() is threading.main_thread()
+    )
+    if use_alarm:
+        def _on_alarm(signum, frame):
+            raise TimeoutError(
+                f"test exceeded the global {_TEST_TIMEOUT_S}s timeout "
+                f"(REPRO_TEST_TIMEOUT)"
+            )
+
+        prev = signal.signal(signal.SIGALRM, _on_alarm)
+        signal.alarm(_TEST_TIMEOUT_S)
+    try:
+        yield
+    finally:
+        if use_alarm:
+            signal.alarm(0)
+            signal.signal(signal.SIGALRM, prev)
 
 
 @pytest.fixture

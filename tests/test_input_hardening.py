@@ -1,0 +1,262 @@
+"""Request guardrails + input validation on the serving surface.
+
+Every rejection path gets its own test: malformed queries and upserts fail
+fast with a precise ``ValueError`` (never a wrong answer or a poisoned
+stream), and the ``ServiceGuardrails`` knobs — deadline, bounded retry,
+admission control — each trip exactly when configured to.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.similarity import SparseEmbeddingIndex
+from repro.core.topk_spmv import TopKSpMVConfig
+from repro.serve import (
+    AdmissionError,
+    CompactionPolicy,
+    ServiceGuardrails,
+    StreamingSimilarityService,
+)
+from repro.utils.watchdog import DeadlineExceeded, Watchdog
+
+N_COLS = 64
+
+
+@pytest.fixture
+def index(rng):
+    emb = rng.standard_normal((120, N_COLS)).astype(np.float32)
+    cfg = TopKSpMVConfig(big_k=8, k=32, num_partitions=4, block_size=32)
+    return SparseEmbeddingIndex.from_dense(emb, nnz_per_row=12, config=cfg)
+
+
+class TestQueryValidation:
+    def test_nan_query_rejected(self, index):
+        x = np.zeros(N_COLS, np.float32)
+        x[3] = np.nan
+        with pytest.raises(ValueError, match="non-finite"):
+            index.query(x)
+
+    def test_inf_query_rejected(self, index):
+        x = np.zeros(N_COLS, np.float32)
+        x[0] = np.inf
+        with pytest.raises(ValueError, match="non-finite"):
+            index.query(x)
+
+    def test_wrong_width_rejected(self, index):
+        with pytest.raises(ValueError, match="width 63 != index feature dim"):
+            index.query(np.zeros(N_COLS - 1, np.float32))
+
+    def test_wrong_rank_rejected(self, index):
+        with pytest.raises(ValueError, match="1-D"):
+            index.query(np.zeros((2, N_COLS), np.float32))
+
+    def test_batch_nan_rejected(self, index):
+        xs = np.zeros((3, N_COLS), np.float32)
+        xs[1, 5] = np.nan
+        with pytest.raises(ValueError, match="non-finite"):
+            index.query_batch(xs)
+
+    def test_batch_wrong_rank_rejected(self, index):
+        with pytest.raises(ValueError, match="2-D"):
+            index.query_batch(np.zeros(N_COLS, np.float32))
+
+    def test_batch_wrong_width_rejected(self, index):
+        with pytest.raises(ValueError, match="width"):
+            index.query_batch(np.zeros((2, N_COLS + 1), np.float32))
+
+    def test_valid_query_still_served(self, index, rng):
+        v, r = index.query(rng.standard_normal(N_COLS).astype(np.float32))
+        assert v.shape == (8,) and r.shape == (8,)
+
+
+class TestUpsertValidation:
+    def test_nan_embedding_rejected(self, index):
+        emb = np.zeros((2, N_COLS), np.float32)
+        emb[1, 0] = np.nan
+        with pytest.raises(ValueError, match="non-finite"):
+            index.upsert(emb)
+
+    def test_inf_embedding_rejected(self, index):
+        emb = np.full((1, N_COLS), np.inf, np.float32)
+        with pytest.raises(ValueError, match="non-finite"):
+            index.upsert(emb)
+
+    def test_wrong_width_rejected(self, index):
+        with pytest.raises(ValueError, match="width"):
+            index.upsert(np.zeros((1, N_COLS + 3), np.float32))
+
+    def test_rejected_upsert_leaves_index_unchanged(self, index, rng):
+        x = rng.standard_normal(N_COLS).astype(np.float32)
+        before = index.query(x)
+        version = index.index.version
+        emb = np.zeros((2, N_COLS), np.float32)
+        emb[0, 0] = np.inf
+        with pytest.raises(ValueError):
+            index.upsert(emb)
+        assert index.index.version == version
+        after = index.query(x)
+        np.testing.assert_array_equal(before[0], after[0])
+        np.testing.assert_array_equal(before[1], after[1])
+
+
+class TestCompactionPolicyWal:
+    def test_wal_threshold_fires(self):
+        policy = CompactionPolicy(max_wal_records=5)
+        stats = type("S", (), {
+            "delta_fraction": 0.0, "tombstone_count": 0, "n_rows": 100,
+        })()
+        assert not policy.should_compact(stats, wal_records=4)
+        assert policy.should_compact(stats, wal_records=5)
+
+    def test_disabled_by_default(self):
+        policy = CompactionPolicy()
+        stats = type("S", (), {
+            "delta_fraction": 0.0, "tombstone_count": 0, "n_rows": 100,
+        })()
+        assert not policy.should_compact(stats, wal_records=10**6)
+
+
+class TestServiceGuardrails:
+    def test_deadline_exceeded_raised_not_returned(self, index, rng):
+        svc = StreamingSimilarityService(
+            index, guardrails=ServiceGuardrails(deadline_s=0.01)
+        )
+        orig = index.query_batch
+
+        def slow(xs, use_kernel=False):
+            out = orig(xs, use_kernel=use_kernel)
+            time.sleep(0.05)
+            return out
+
+        index.query_batch = slow
+        with pytest.raises(DeadlineExceeded):
+            svc.search(rng.standard_normal((1, N_COLS)).astype(np.float32))
+        assert svc.dispatch_info()["service"]["deadline_exceeded"] == 1
+
+    def test_retry_recovers_transient_failure(self, index, rng):
+        svc = StreamingSimilarityService(
+            index, guardrails=ServiceGuardrails(max_retries=2)
+        )
+        orig = index.query_batch
+        calls = {"n": 0}
+
+        def flaky(xs, use_kernel=False):
+            calls["n"] += 1
+            if calls["n"] == 1:
+                raise RuntimeError("transient dispatch failure")
+            return orig(xs, use_kernel=use_kernel)
+
+        index.query_batch = flaky
+        v, r = svc.search(rng.standard_normal((1, N_COLS)).astype(np.float32))
+        assert v.shape == (1, 8)
+        info = svc.dispatch_info()["service"]
+        assert info["retries"] == 1 and info["failures"] == 1
+
+    def test_retries_exhausted_reraises(self, index, rng):
+        svc = StreamingSimilarityService(
+            index, guardrails=ServiceGuardrails(max_retries=1)
+        )
+
+        def dead(xs, use_kernel=False):
+            raise RuntimeError("permanent failure")
+
+        index.query_batch = dead
+        with pytest.raises(RuntimeError, match="permanent"):
+            svc.search(rng.standard_normal((1, N_COLS)).astype(np.float32))
+        assert svc.dispatch_info()["service"]["failures"] == 2
+
+    def test_invalid_input_never_retried(self, index, rng):
+        svc = StreamingSimilarityService(
+            index, guardrails=ServiceGuardrails(max_retries=5)
+        )
+        bad = np.zeros((1, N_COLS), np.float32)
+        bad[0, 0] = np.nan
+        with pytest.raises(ValueError, match="non-finite"):
+            svc.search(bad)
+        assert svc.dispatch_info()["service"]["retries"] == 0
+
+    def test_admission_control_sheds_load(self, index, rng):
+        svc = StreamingSimilarityService(
+            index, guardrails=ServiceGuardrails(max_in_flight=1)
+        )
+        orig = index.query_batch
+        entered = threading.Event()
+        release = threading.Event()
+
+        def blocking(xs, use_kernel=False):
+            entered.set()
+            release.wait(timeout=30)
+            return orig(xs, use_kernel=use_kernel)
+
+        index.query_batch = blocking
+        xs = rng.standard_normal((1, N_COLS)).astype(np.float32)
+        t = threading.Thread(target=svc.search, args=(xs,))
+        t.start()
+        try:
+            assert entered.wait(timeout=30)
+            with pytest.raises(AdmissionError, match="in flight"):
+                svc.search(xs)
+        finally:
+            release.set()
+            t.join(timeout=30)
+        info = svc.dispatch_info()["service"]
+        assert info["admission_rejected"] == 1
+        assert info["in_flight"] == 0  # slots released on every path
+
+    def test_backoff_spacing(self, index, rng):
+        svc = StreamingSimilarityService(
+            index,
+            guardrails=ServiceGuardrails(max_retries=2, backoff_s=0.02),
+        )
+        stamps = []
+        orig = index.query_batch
+
+        def flaky(xs, use_kernel=False):
+            stamps.append(time.monotonic())
+            if len(stamps) < 3:
+                raise RuntimeError("transient")
+            return orig(xs, use_kernel=use_kernel)
+
+        index.query_batch = flaky
+        svc.search(rng.standard_normal((1, N_COLS)).astype(np.float32))
+        assert len(stamps) == 3
+        # exponential: second gap (0.04s nominal) >= first gap (0.02s)
+        assert stamps[1] - stamps[0] >= 0.015
+        assert stamps[2] - stamps[1] >= 0.03
+
+    def test_guardrails_disabled_by_default(self, index, rng):
+        svc = StreamingSimilarityService(index)
+        v, r = svc.search(rng.standard_normal((2, N_COLS)).astype(np.float32))
+        assert v.shape == (2, 8)
+        info = svc.dispatch_info()["service"]
+        assert info["queries_served"] == 2
+        assert info["retries"] == 0
+
+
+class TestWatchdogUtility:
+    def test_check_raises_after_fire(self):
+        wd = Watchdog(0.01)
+        with wd:
+            time.sleep(0.05)
+            with pytest.raises(DeadlineExceeded):
+                wd.check()
+
+    def test_custom_callback_still_sets_fired(self):
+        hits = []
+        wd = Watchdog(0.01, on_timeout=lambda: hits.append(1))
+        with wd:
+            time.sleep(0.05)
+        assert wd.fired and hits == [1]
+
+    def test_disabled_when_nonpositive(self):
+        with Watchdog(0.0, raise_on_timeout=True) as wd:
+            time.sleep(0.01)
+        assert not wd.fired
+
+    def test_raise_on_timeout_does_not_mask_exceptions(self):
+        with pytest.raises(KeyError):
+            with Watchdog(0.001, raise_on_timeout=True):
+                time.sleep(0.05)
+                raise KeyError("original error wins")
