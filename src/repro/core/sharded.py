@@ -693,6 +693,10 @@ class _SpmdDispatcher:
         self.fn_builds = 0
         self.retraces = 0
         self.dispatches = 0
+        # Batched fn reuse split by padded-bucket vs exact-bucket hits —
+        # mirrors QueryExecutor.cache_info (docs/SERVING.md).
+        self.q_bucket_hits = 0
+        self.q_exact_hits = 0
 
     # -- device sync ---------------------------------------------------------
 
@@ -936,7 +940,13 @@ class _SpmdDispatcher:
             xs = np.concatenate(
                 [xs, np.zeros((bucket - q, xs.shape[1]), np.float32)]
             )
+        builds_before = self.fn_builds
         fn = self._fn(bucket, args, sig)
+        if self.fn_builds == builds_before:  # reused a compiled fn
+            if bucket != q:
+                self.q_bucket_hits += 1      # padded into a shared bucket
+            else:
+                self.q_exact_hits += 1
         self.dispatches += 1
         xspec = (
             rules_lib.logical_to_spec(
@@ -954,5 +964,7 @@ class _SpmdDispatcher:
             "fn_builds": self.fn_builds,
             "retraces": self.retraces,
             "dispatches": self.dispatches,
+            "q_bucket_hits": self.q_bucket_hits,
+            "q_exact_hits": self.q_exact_hits,
             "bundle": self.bundle.counters(),
         }

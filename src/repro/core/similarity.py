@@ -94,6 +94,17 @@ class SparseEmbeddingIndex:
         return isinstance(self.index, sharded_lib.ShardedTopKSpMVIndex)
 
     @property
+    def replica_factor(self) -> int:
+        """Query fan-out width of one kernel pass (mesh "replica" axis).
+
+        A sharded index spreads a coalesced batch across R replica groups,
+        so one pass carries R x the per-device Q bucket — the micro-batching
+        frontend multiplies its target/capacity by this factor
+        (docs/SERVING.md §"Request frontend").  1 for a single-device index.
+        """
+        return self.index.n_replicas if self.is_sharded else 1
+
+    @property
     def n_cols(self) -> int:
         """Feature dimension served by the backing index."""
         return self.index.n_cols
@@ -158,17 +169,22 @@ class SparseEmbeddingIndex:
     def query(
         self, x: np.ndarray, use_kernel: bool = True
     ) -> Tuple[np.ndarray, np.ndarray]:
-        """Top-K (scores, row ids) for one dense query embedding."""
+        """Top-K (scores, row ids) for one dense query embedding.
+
+        Routed through the same batched dispatch entry as ``query_batch``
+        (as a Q=1 batch): the convenience path and the micro-batching
+        frontend share ONE compiled-fn/pin plane, so ``dispatch_info()``
+        counters agree no matter which door a query came through, and a
+        Q=1 dispatch warms the same Q-bucket cache the frontend drifts
+        across.  Answers are bit-identical to the dedicated single-query
+        path (the batched kernel at Q=1 evaluates the same partitioned
+        approximation).
+        """
         self._validate_query(x, batched=False)
-        if self.is_sharded:
-            v, r = self.index.query(
-                jnp.asarray(x, jnp.float32), use_kernel=use_kernel
-            )
-            return np.asarray(v), np.asarray(r)
-        v, r = topk_lib.topk_spmv(
-            self.index, jnp.asarray(x, jnp.float32), use_kernel=use_kernel
+        v, r = self._dispatch_batch(
+            np.asarray(x)[None, :], use_kernel=use_kernel
         )
-        return np.asarray(v), np.asarray(r)
+        return v[0], r[0]
 
     def query_batch(
         self, xs: np.ndarray, use_kernel: bool = False
@@ -188,14 +204,25 @@ class SparseEmbeddingIndex:
         stream amortization the kernel exists for.
         """
         self._validate_query(xs, batched=True)
+        return self._dispatch_batch(xs, use_kernel=use_kernel)
+
+    def _dispatch_batch(
+        self, xs: np.ndarray, use_kernel: bool
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """The one dispatch entry every query path funnels through.
+
+        ``query`` (Q=1), ``query_batch`` and the frontend's coalesced
+        passes all land here — one place that derives the executor from
+        the config and routes sharded vs single-device, so the executor's
+        cache/bucket counters count every path the same way.
+        """
+        xs = jnp.asarray(xs, jnp.float32)
         if self.is_sharded:
-            v, r = self.index.query_batched(
-                jnp.asarray(xs, jnp.float32), use_kernel=use_kernel
+            v, r = self.index.query_batched(xs, use_kernel=use_kernel)
+        else:
+            v, r = topk_lib.topk_spmv_batched(
+                self.index, xs, use_kernel=use_kernel
             )
-            return np.asarray(v), np.asarray(r)
-        v, r = topk_lib.topk_spmv_batched(
-            self.index, jnp.asarray(xs, jnp.float32), use_kernel=use_kernel
-        )
         return np.asarray(v), np.asarray(r)
 
     def query_exact(self, x: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:

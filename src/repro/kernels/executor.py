@@ -317,6 +317,15 @@ class QueryExecutor:
         # With churn-stable snapshot bucketing this stays 0 across upserts
         # until a bucket doubles.
         self.retraces = 0
+        # Batched dispatches that reused an already-compiled fn, split by
+        # HOW they hit: ``q_bucket_hits`` = the batch was padded up to a
+        # power-of-two bucket compiled for a different Q (the micro-batching
+        # frontend's drifting batch sizes live here), ``q_exact_hits`` = the
+        # batch size was already a compiled bucket.  Together with
+        # ``retraces`` these let tests assert drifting Q stays retrace-free
+        # without parsing ``fn_builds``.
+        self.q_bucket_hits = 0
+        self.q_exact_hits = 0
 
     # -- dispatch ------------------------------------------------------------
 
@@ -426,10 +435,16 @@ class QueryExecutor:
             )
         q = xs.shape[0]
         bucket = _q_bucket(q) if self.q_bucketing else q
+        builds_before = self.fn_builds
         fn, snap = self.prepare(
             packed, bucket, path, stream_layout,
             row_map=row_map, row_map_key=row_map_key, device=device,
         )
+        if self.fn_builds == builds_before:  # reused a compiled fn
+            if bucket != q:
+                self.q_bucket_hits += 1      # padded into a shared bucket
+            else:
+                self.q_exact_hits += 1
         self.dispatches += 1
         if bucket != q:
             xs = _query_padder(bucket - q)(xs)
@@ -445,6 +460,8 @@ class QueryExecutor:
             "fn_builds": self.fn_builds,
             "retraces": self.retraces,                  # churn-driven rebuilds
             "dispatches": self.dispatches,
+            "q_bucket_hits": self.q_bucket_hits,        # padded-batch fn reuse
+            "q_exact_hits": self.q_exact_hits,          # exact-bucket fn reuse
             "device_snapshots": len(self._pinned),      # this executor's pins
             "device_snapshots_process_wide": device_cache_size(),
         }

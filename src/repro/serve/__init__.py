@@ -1,5 +1,12 @@
 """Serving substrate: batched KV-cache engine, approximate Top-K heads, and
-the serve-while-ingest streaming similarity service."""
+the serve-while-ingest streaming similarity service with its continuous
+micro-batching request frontend."""
+from repro.serve.frontend import (
+    FrontendConfig,
+    IntensityModel,
+    QueueFullError,
+    RequestFrontend,
+)
 from repro.serve.streaming import (
     AdmissionError,
     CompactionPolicy,

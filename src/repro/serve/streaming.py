@@ -27,12 +27,21 @@ recover` rebuilds a bit-identical service from disk.  A
 :class:`ServiceGuardrails` adds per-call deadlines, bounded
 retry-with-backoff and admission control so one stuck or failing dispatch
 cannot take the whole plane down with it.
+
+**Continuous micro-batching** (docs/SERVING.md §"Request frontend"):
+constructing the service with ``frontend=FrontendConfig(...)`` attaches a
+:class:`~repro.serve.frontend.RequestFrontend` — arriving single queries
+(:meth:`StreamingSimilarityService.submit`, returning futures) coalesce
+into multi-query kernel passes, with the flush moment picked from an
+online arrival/service intensity model and a latency deadline.  Guardrail
+deadlines then measure from enqueue, so queue wait counts against them.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
 import time
+from concurrent.futures import Future
 from typing import Optional, Sequence, Tuple
 
 import numpy as np
@@ -40,6 +49,7 @@ import numpy as np
 from repro.core import bscsr as bscsr_lib
 from repro.core.persistence import DurableIndexStore
 from repro.core.similarity import SimilaritySearchStats, SparseEmbeddingIndex
+from repro.serve.frontend import FrontendConfig, RequestFrontend
 from repro.utils.watchdog import DeadlineExceeded, Watchdog
 
 
@@ -85,7 +95,11 @@ class ServiceGuardrails:
     ``deadline_s`` bounds one ``search`` call's wall clock — a Python
     thread cannot interrupt an in-flight jax dispatch, so an overdue call
     raises :class:`~repro.utils.watchdog.DeadlineExceeded` as soon as the
-    dispatch returns instead of handing back a stale answer.
+    dispatch returns instead of handing back a stale answer.  With the
+    micro-batching frontend active the deadline is measured from *enqueue*
+    (the moment :meth:`StreamingSimilarityService.submit` accepted the
+    request), so queue wait counts against it instead of being added on
+    top — the frontend's flush timer can then preempt the deadline.
     ``max_retries``/``backoff_s`` retry transient dispatch failures
     (exponential backoff: ``backoff_s * 2**attempt``); deadline overruns
     and invalid inputs are never retried.  ``max_in_flight`` sheds load at
@@ -117,11 +131,14 @@ class StreamingSimilarityService:
         policy: Optional[CompactionPolicy] = None,
         guardrails: Optional[ServiceGuardrails] = None,
         store: Optional[DurableIndexStore] = None,
+        frontend: Optional[FrontendConfig] = None,
+        use_kernel: bool = False,
     ):
         self.index = index
         self.policy = policy or CompactionPolicy()
         self.guardrails = guardrails or ServiceGuardrails()
         self.store = store
+        self.use_kernel = use_kernel
         if store is not None and index.is_sharded:
             raise ValueError(
                 "DurableIndexStore persists a single-device index; a "
@@ -143,6 +160,16 @@ class StreamingSimilarityService:
         self._in_flight = 0
         self._flight_lock = threading.Lock()
         self._compacting = False
+        # Continuous micro-batching frontend (serve/frontend.py): arriving
+        # single queries coalesce into multi-query kernel passes; the
+        # scheduler is pure policy on top of the guardrailed dispatch.
+        self.frontend: Optional[RequestFrontend] = None
+        if frontend is not None:
+            self.frontend = RequestFrontend(
+                self._frontend_dispatch,
+                config=frontend,
+                replica_factor=index.replica_factor,
+            )
         if store is not None and not store.has_checkpoint:
             self.checkpoint()  # anchor the WAL: logging needs a base state
 
@@ -224,6 +251,102 @@ class StreamingSimilarityService:
                     time.sleep(self.guardrails.backoff_s * (2 ** attempt))
                 attempt += 1
                 self.retries += 1
+
+    # -- micro-batching frontend (serve/frontend.py) -------------------------
+
+    def submit(self, x: np.ndarray, tenant: Optional[str] = None) -> Future:
+        """Enqueue one (M,) query for coalesced dispatch; returns a future.
+
+        Requires ``frontend=FrontendConfig(...)`` at construction.  The
+        future resolves to this request's ``(values, rows)`` pair — or to
+        :class:`DeadlineExceeded` if the request outlived
+        ``guardrails.deadline_s`` measured from *this* call (queue wait
+        included).  Invalid inputs raise here, in the caller's thread,
+        before anything is enqueued.
+        """
+        if self.frontend is None:
+            raise ValueError(
+                "no frontend configured — pass frontend=FrontendConfig() "
+                "to StreamingSimilarityService"
+            )
+        x = np.asarray(x, np.float32)
+        self.index._validate_query(x, batched=False)
+        return self.frontend.submit(x, tenant=tenant)
+
+    def flush(self, timeout: Optional[float] = 30.0) -> None:
+        """Block until every queued frontend request has been dispatched."""
+        if self.frontend is not None:
+            self.frontend.flush(timeout=timeout)
+
+    def close(self, drain: bool = True) -> None:
+        """Stop the frontend scheduler (draining the queue by default)."""
+        if self.frontend is not None:
+            self.frontend.close(drain=drain)
+
+    def __enter__(self) -> "StreamingSimilarityService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _frontend_dispatch(self, xs: np.ndarray, enqueue_ts) -> list:
+        """One coalesced kernel pass over a (Q, M) batch of queued requests.
+
+        Guardrails compose with queue wait instead of double-counting it:
+        the retry watchdog is armed with the *youngest* request's residual
+        budget (so backoff sleeps never outlive every live deadline), and
+        afterwards each request is individually checked against
+        ``deadline_s`` measured from its own enqueue time.  Returns one
+        ``(values, rows)`` pair — or a :class:`DeadlineExceeded` — per
+        request, positionally.
+        """
+        g = self.guardrails
+        q = xs.shape[0]
+        with self._flight_lock:
+            if g.max_in_flight and self._in_flight >= g.max_in_flight:
+                self.admission_rejected += 1
+                raise AdmissionError(
+                    f"{self._in_flight} passes already in flight "
+                    f"(max_in_flight={g.max_in_flight})"
+                )
+            self._in_flight += 1
+        try:
+            budget = 0.0
+            if g.deadline_s:
+                budget = g.deadline_s - (time.monotonic() - max(enqueue_ts))
+                if budget <= 0:   # every request is already overdue: no pass
+                    self.deadline_exceeded += q
+                    return [
+                        DeadlineExceeded(
+                            f"queued past the {g.deadline_s}s deadline"
+                        )
+                        for _ in range(q)
+                    ]
+            try:
+                with Watchdog(budget) as wd:
+                    vals, rows = self._dispatch_with_retry(
+                        xs, self.use_kernel, wd
+                    )
+            except DeadlineExceeded as e:
+                self.deadline_exceeded += q
+                return [e for _ in range(q)]
+            done = time.monotonic()
+            out: list = []
+            for i, enq in enumerate(enqueue_ts):
+                if g.deadline_s and done - enq > g.deadline_s:
+                    self.deadline_exceeded += 1
+                    out.append(DeadlineExceeded(
+                        f"answer outlived the {g.deadline_s}s deadline "
+                        f"(measured from enqueue)"
+                    ))
+                else:
+                    self.queries_served += 1
+                    out.append((vals[i], rows[i]))
+            self._note_degraded()
+            return out
+        finally:
+            with self._flight_lock:
+                self._in_flight -= 1
 
     def _note_degraded(self) -> None:
         backing = self.index.index
@@ -330,4 +453,6 @@ class StreamingSimilarityService:
             ),
             "replayed_records": self.replayed_records,
         }
+        if self.frontend is not None:
+            info["frontend"] = self.frontend.info()
         return info

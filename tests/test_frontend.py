@@ -1,0 +1,442 @@
+"""Continuous micro-batching frontend: scheduler policy + service wiring.
+
+Scheduler-level tests drive ``RequestFrontend`` against a recording fake
+dispatch (no jax) so flush decisions are fast and deterministic;
+service-level tests run the real ``StreamingSimilarityService`` dispatch
+over a tiny index — coalescing, enqueue-measured deadlines, retrace-free
+drifting batch sizes, and single-vs-batched counter agreement.
+"""
+import threading
+import time
+from concurrent.futures import CancelledError
+
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core.topk_spmv import TopKSpMVConfig
+from repro.serve import (
+    FrontendConfig,
+    IntensityModel,
+    QueueFullError,
+    RequestFrontend,
+    ServiceGuardrails,
+    StreamingSimilarityService,
+)
+from repro.utils.watchdog import DeadlineExceeded
+
+N_COLS = 64
+
+
+def make_service(frontend=None, guardrails=None, n_rows=200, seed=0):
+    rng = np.random.default_rng(seed)
+    dense = rng.standard_normal((n_rows, N_COLS)).astype(np.float32)
+    # distinctive big_k so the interned executor's counters start untouched
+    cfg = TopKSpMVConfig(big_k=13, k=8, num_partitions=2, block_size=32)
+    index = core.SparseEmbeddingIndex.from_dense(dense, nnz_per_row=8,
+                                                 config=cfg)
+    return StreamingSimilarityService(index, guardrails=guardrails,
+                                      frontend=frontend)
+
+
+class RecordingDispatch:
+    """Fake backend: records each pass's batch + tenant codes, optional
+    block/delay, answers ``(row_of_zeros, row_of_zeros)`` per request."""
+
+    def __init__(self, delay_s=0.0, gate: threading.Event = None):
+        self.batches = []
+        self.delay_s = delay_s
+        self.gate = gate
+
+    def __call__(self, xs, enqueue_ts):
+        if self.gate is not None:
+            assert self.gate.wait(timeout=30)
+        if self.delay_s:
+            time.sleep(self.delay_s)
+        self.batches.append(np.asarray(xs[:, 0]).astype(int).tolist())
+        z = np.zeros(4, np.float32)
+        return [(z, z) for _ in range(xs.shape[0])]
+
+
+def tagged(code):
+    x = np.zeros(N_COLS, np.float32)
+    x[0] = code
+    return x
+
+
+class TestSchedulerPolicy:
+    def test_target_batch_coalesces_one_pass(self):
+        d = RecordingDispatch()
+        fe = RequestFrontend(d, FrontendConfig(
+            flush_deadline_s=30.0, max_batch=16, adaptive=False,
+            target_batch=8))
+        try:
+            futs = [fe.submit(tagged(i)) for i in range(8)]
+            for f in futs:
+                f.result(timeout=30)
+            assert [len(b) for b in d.batches] == [8]
+            assert fe.flush_reasons["target"] == 1
+            assert fe.batch_histogram == {8: 1}
+        finally:
+            fe.close()
+
+    def test_idle_degrades_to_q1(self):
+        """Low traffic: target 1 flushes each request immediately."""
+        d = RecordingDispatch()
+        fe = RequestFrontend(d, FrontendConfig(
+            flush_deadline_s=30.0, max_batch=16, adaptive=False,
+            target_batch=1))
+        try:
+            for i in range(3):
+                fe.submit(tagged(i)).result(timeout=30)
+            assert [len(b) for b in d.batches] == [1, 1, 1]
+        finally:
+            fe.close()
+
+    def test_deadline_flush_bounds_wait(self):
+        """Sub-target queue still flushes once the oldest wait hits the
+        deadline — the p99 bound at low traffic."""
+        d = RecordingDispatch()
+        fe = RequestFrontend(d, FrontendConfig(
+            flush_deadline_s=0.05, max_batch=64, adaptive=False,
+            target_batch=64))
+        try:
+            t0 = time.monotonic()
+            futs = [fe.submit(tagged(i)) for i in range(3)]
+            for f in futs:
+                f.result(timeout=30)
+            waited = time.monotonic() - t0
+            assert [len(b) for b in d.batches] == [3]
+            assert fe.flush_reasons["deadline"] == 1
+            assert waited >= 0.04          # really was the timer, not target
+        finally:
+            fe.close()
+
+    def test_burst_larger_than_capacity_splits(self):
+        """A burst beyond the max Q bucket splits into multiple passes."""
+        gate = threading.Event()
+        d = RecordingDispatch(gate=gate)
+        fe = RequestFrontend(d, FrontendConfig(
+            flush_deadline_s=0.05, max_batch=4, adaptive=False,
+            target_batch=100))
+        try:
+            futs = [fe.submit(tagged(i)) for i in range(10)]
+            gate.set()                     # whole burst queued before pass 1
+            for f in futs:
+                f.result(timeout=30)
+            sizes = [len(b) for b in d.batches]
+            assert sum(sizes) == 10
+            assert max(sizes) <= 4         # never exceeds one pass's capacity
+            assert fe.flush_reasons["capacity"] >= 2
+            assert sorted(s for b in d.batches for s in b) == list(range(10))
+        finally:
+            fe.close()
+
+    def test_replica_factor_multiplies_capacity(self):
+        """A sharded backend's replica fan-out widens one pass's bucket."""
+        gate = threading.Event()
+        d = RecordingDispatch(gate=gate)
+        fe = RequestFrontend(d, FrontendConfig(
+            flush_deadline_s=0.05, max_batch=4, adaptive=False,
+            target_batch=100), replica_factor=2)
+        try:
+            assert fe.capacity == 8
+            futs = [fe.submit(tagged(i)) for i in range(8)]
+            gate.set()
+            for f in futs:
+                f.result(timeout=30)
+            assert [len(b) for b in d.batches] == [8]
+        finally:
+            fe.close()
+
+    def test_tenant_fairness_starvation_bound(self):
+        """A flooding tenant cannot push another's request past one flush:
+        round-robin assembly seats every waiting tenant in the next pass."""
+        gate = threading.Event()
+        d = RecordingDispatch(gate=gate)
+        fe = RequestFrontend(d, FrontendConfig(
+            flush_deadline_s=30.0, max_batch=4, adaptive=False,
+            target_batch=1))
+        try:
+            first = fe.submit(tagged(100), tenant="a")   # pass 1 (gated)
+            time.sleep(0.05)      # let the scheduler take pass 1
+            flood = [fe.submit(tagged(i), tenant="a") for i in range(5)]
+            other = fe.submit(tagged(999), tenant="b")
+            gate.set()
+            other.result(timeout=30)
+            first.result(timeout=30)
+            for f in flood:
+                f.result(timeout=30)
+            assert d.batches[0] == [100]
+            # tenant b's lone request rides the very NEXT pass despite five
+            # of tenant a's requests having queued ahead of it
+            assert 999 in d.batches[1]
+        finally:
+            fe.close()
+
+    def test_shutdown_drains_queue(self):
+        gate = threading.Event()
+        d = RecordingDispatch(gate=gate)
+        fe = RequestFrontend(d, FrontendConfig(
+            flush_deadline_s=30.0, max_batch=8, adaptive=False,
+            target_batch=100))
+        futs = [fe.submit(tagged(i)) for i in range(6)]
+        gate.set()
+        fe.close(drain=True)
+        assert all(f.done() and not f.cancelled() for f in futs)
+        assert fe.queue_depth == 0
+        assert fe.flush_reasons["drain"] >= 1
+        with pytest.raises(RuntimeError, match="closed"):
+            fe.submit(tagged(0))
+
+    def test_close_without_drain_cancels(self):
+        gate = threading.Event()
+        d = RecordingDispatch(gate=gate)
+        fe = RequestFrontend(d, FrontendConfig(
+            flush_deadline_s=30.0, max_batch=8, adaptive=False,
+            target_batch=100))
+        futs = [fe.submit(tagged(i)) for i in range(3)]
+        fe.close(drain=False)
+        gate.set()
+        for f in futs:
+            with pytest.raises(CancelledError):
+                f.result(timeout=5)
+
+    def test_queue_full_sheds_at_the_door(self):
+        gate = threading.Event()
+        d = RecordingDispatch(gate=gate)
+        fe = RequestFrontend(d, FrontendConfig(
+            flush_deadline_s=30.0, max_batch=8, max_queue=2, adaptive=False,
+            target_batch=100))
+        try:
+            fe.submit(tagged(0))
+            fe.submit(tagged(1))
+            with pytest.raises(QueueFullError, match="max_queue"):
+                fe.submit(tagged(2))
+            assert fe.rejected == 1
+        finally:
+            gate.set()
+            fe.close()
+
+    def test_empty_queue_timer_wakeup(self):
+        """An idle frontend parks on the condition (no flush churn) and a
+        submission after the idle period is served promptly."""
+        d = RecordingDispatch()
+        fe = RequestFrontend(d, FrontendConfig(
+            flush_deadline_s=0.01, max_batch=8, adaptive=False,
+            target_batch=4))
+        try:
+            fe.submit(tagged(0)).result(timeout=30)   # deadline flush at Q=1
+            flushes_idle_start = fe.flushes
+            time.sleep(0.2)                            # many deadlines' worth
+            assert fe.flushes == flushes_idle_start    # no empty-queue flushes
+            t0 = time.monotonic()
+            fe.submit(tagged(1)).result(timeout=30)
+            assert time.monotonic() - t0 < 5.0
+            assert fe.flushes == flushes_idle_start + 1
+        finally:
+            fe.close()
+
+    def test_dispatch_error_fails_the_pass(self):
+        def boom(xs, enqueue_ts):
+            raise RuntimeError("backend down")
+
+        fe = RequestFrontend(boom, FrontendConfig(
+            flush_deadline_s=30.0, max_batch=8, adaptive=False,
+            target_batch=2))
+        try:
+            futs = [fe.submit(tagged(i)) for i in range(2)]
+            for f in futs:
+                with pytest.raises(RuntimeError, match="backend down"):
+                    f.result(timeout=30)
+        finally:
+            fe.close()
+
+
+class TestIntensityModel:
+    def test_target_tracks_arrival_rate(self):
+        m = IntensityModel(service_time_seed={1: 0.01, 2: 0.012, 4: 0.015})
+        t = 0.0
+        for _ in range(50):                 # λ = 300/s
+            m.observe_arrival(t)
+            t += 1.0 / 300.0
+        assert abs(m.arrival_rate - 300.0) < 1.0
+        # B >= λ s(B): 1 < 3, 2 < 3.6, 4 < 4.5, 8 >= 4.5 (nearest bucket)
+        assert m.target_q(capacity=64) == 8
+        assert m.target_q(capacity=4) == 4  # clamped at the per-pass cap
+
+    def test_idle_rate_targets_q1(self):
+        m = IntensityModel(service_time_seed={1: 0.01})
+        t = 0.0
+        for _ in range(5):                  # λ = 10/s: 1 >= 10 * 0.01 * 0.1
+            m.observe_arrival(t)
+            t += 0.1
+        assert m.target_q(capacity=64) == 1
+
+    def test_no_observations_targets_q1(self):
+        assert IntensityModel().target_q(capacity=64) == 1
+
+    def test_service_time_learned_online(self):
+        m = IntensityModel()
+        m.observe_service(3, 0.02)          # lands in bucket 4
+        assert m.service_time(4) == pytest.approx(0.02)
+        m.observe_service(4, 0.04)
+        assert 0.02 < m.service_time(4) < 0.04   # EWMA, not last-sample
+
+
+class TestServiceIntegration:
+    def test_submit_futures_answer_like_query(self):
+        svc = make_service(frontend=FrontendConfig(
+            flush_deadline_s=0.02, max_batch=8))
+        try:
+            rng = np.random.default_rng(3)
+            xs = rng.standard_normal((6, N_COLS)).astype(np.float32)
+            futs = [svc.submit(x) for x in xs]
+            got = [f.result(timeout=60) for f in futs]
+            want_v, want_r = svc.index.query_batch(xs)
+            for i, (v, r) in enumerate(got):
+                np.testing.assert_array_equal(r, want_r[i])
+                np.testing.assert_allclose(v, want_v[i], rtol=1e-5)
+            info = svc.dispatch_info()["frontend"]
+            assert info["completed"] == 6
+            assert sum(q * n for q, n in info["batch_histogram"].items()) == 6
+        finally:
+            svc.close()
+
+    def test_submit_requires_frontend(self):
+        svc = make_service()
+        with pytest.raises(ValueError, match="no frontend"):
+            svc.submit(np.zeros(N_COLS, np.float32))
+
+    def test_submit_validates_in_caller_thread(self):
+        svc = make_service(frontend=FrontendConfig(flush_deadline_s=0.02))
+        try:
+            bad = np.zeros(N_COLS, np.float32)
+            bad[0] = np.nan
+            with pytest.raises(ValueError, match="non-finite"):
+                svc.submit(bad)
+            with pytest.raises(ValueError, match="1-D"):
+                svc.submit(np.zeros((2, N_COLS), np.float32))
+        finally:
+            svc.close()
+
+    def test_deadline_shorter_than_service_time(self):
+        """Every pass outlives the budget: futures resolve to
+        DeadlineExceeded, the service stays up and keeps counting."""
+        svc = make_service(
+            frontend=FrontendConfig(flush_deadline_s=0.005, max_batch=8),
+            guardrails=ServiceGuardrails(deadline_s=0.02),
+        )
+        try:
+            orig = svc.index.query_batch
+
+            def slow(xs, use_kernel=False):
+                out = orig(xs, use_kernel=use_kernel)
+                time.sleep(0.05)           # service time > deadline
+                return out
+
+            svc.index.query_batch = slow
+            fut = svc.submit(np.ones(N_COLS, np.float32))
+            with pytest.raises(DeadlineExceeded):
+                fut.result(timeout=60)
+            assert svc.dispatch_info()["service"]["deadline_exceeded"] >= 1
+            svc.index.query_batch = orig   # service recovered
+            ok = svc.submit(np.ones(N_COLS, np.float32))
+            assert ok.result(timeout=60)[0].shape == (13,)
+        finally:
+            svc.close()
+
+    def test_guardrail_deadline_measured_from_enqueue(self):
+        """Queue wait counts against the deadline (no double-count): a fast
+        dispatch after a too-long queue wait is still overdue."""
+        svc = make_service(
+            # flush timer longer than the guardrail deadline: the request
+            # goes overdue IN THE QUEUE, before any dispatch work happens
+            frontend=FrontendConfig(flush_deadline_s=0.2, max_batch=8,
+                                    adaptive=False, target_batch=100),
+            guardrails=ServiceGuardrails(deadline_s=0.05),
+        )
+        try:
+            fut = svc.submit(np.ones(N_COLS, np.float32))
+            with pytest.raises(DeadlineExceeded, match="deadline"):
+                fut.result(timeout=60)
+            assert svc.dispatch_info()["service"]["deadline_exceeded"] == 1
+        finally:
+            svc.close()
+
+    def test_drifting_batch_sizes_stay_retrace_free(self):
+        """The acceptance property the Q-buckets exist for: pass sizes
+        drifting across flushes reuse compiled fns — zero retraces, with
+        the reuse visible in the bucket-hit counters (not fn_builds)."""
+        svc = make_service(frontend=FrontendConfig(
+            flush_deadline_s=30.0, max_batch=16, adaptive=False,
+            target_batch=100))
+        try:
+            rng = np.random.default_rng(5)
+
+            def burst(n):
+                futs = [
+                    svc.submit(
+                        rng.standard_normal(N_COLS).astype(np.float32)
+                    )
+                    for _ in range(n)
+                ]
+                svc.flush()                   # deterministic one-pass flush
+                return [f.result(timeout=60) for f in futs]
+
+            burst(3)                          # warm bucket 4
+            burst(7)                          # warm bucket 8
+            warm = svc.dispatch_info()
+            for n in (4, 3, 5, 6, 8, 7):      # drift across warmed buckets
+                burst(n)
+            info = svc.dispatch_info()
+            assert info["retraces"] == warm["retraces"] == 0
+            assert info["fn_builds"] == warm["fn_builds"]   # no new compiles
+            hits = (info["q_bucket_hits"] + info["q_exact_hits"]
+                    - warm["q_bucket_hits"] - warm["q_exact_hits"])
+            assert hits == 6                  # every drifted pass was a hit
+            assert info["q_bucket_hits"] > warm["q_bucket_hits"]
+        finally:
+            svc.close()
+
+    def test_single_query_and_batch_share_dispatch_counters(self):
+        """Satellite: query() routes through the batched entry, so the
+        convenience path and the frontend agree on one counter plane."""
+        svc = make_service(seed=7)
+        x = np.ones(N_COLS, np.float32)
+        before = svc.index.dispatch_info()
+        svc.index.query(x, use_kernel=True)           # Q=1 bucket, kernel
+        mid = svc.index.dispatch_info()
+        assert mid["dispatches"] == before["dispatches"] + 1
+        svc.index.query_batch(x[None], use_kernel=True)
+        after = svc.index.dispatch_info()
+        # the Q=1 batch reuses the exact fn the single query compiled
+        assert after["fn_builds"] == mid["fn_builds"]
+        assert after["q_exact_hits"] == mid["q_exact_hits"] + 1
+
+    def test_serve_while_ingest_through_frontend(self):
+        """Mutations interleave with coalesced passes; answers track the
+        live snapshot and steady churn stays retrace-free."""
+        svc = make_service(frontend=FrontendConfig(
+            flush_deadline_s=0.01, max_batch=8))
+        try:
+            rng = np.random.default_rng(9)
+            q = rng.standard_normal(N_COLS).astype(np.float32)
+            svc.submit(q).result(timeout=60)
+            svc.ingest(q[None])               # absorb first-mutation bucket
+            svc.submit(q).result(timeout=60)
+            base = svc.dispatch_info()
+            for _ in range(3):
+                svc.ingest(
+                    rng.standard_normal((1, N_COLS)).astype(np.float32)
+                )
+                svc.submit(q).result(timeout=60)
+            v, r = svc.submit(q).result(timeout=60)
+            info = svc.dispatch_info()
+            assert info["retraces"] == base["retraces"]
+            assert svc.stats().n_rows == 204
+            want_v, want_r = svc.index.query_batch(q[None])
+            np.testing.assert_array_equal(r, want_r[0])
+            np.testing.assert_allclose(v, want_v[0], rtol=1e-5)
+        finally:
+            svc.close()
