@@ -1,0 +1,158 @@
+"""Iterative graph workloads on the accumulate-mode kernel (PPR + eigen).
+
+Measures the serving cost of ``y = alpha*A@x + beta*y`` iteration — the
+graph-workload mode of the BS-CSR substrate (docs/ARCHITECTURE.md §12):
+
+* **ms/iteration** — one fused accumulate dispatch (steady state: pinned
+  streams, compiled fn reuse) vs the jitted dense ``alpha*(A@y)+(1-alpha)*p``
+  matvec oracle on the same operator.
+* **zero-transfer / zero-retrace iteration** — the PPR loop after warmup
+  runs under ``jax.transfer_guard_host_to_device("disallow")`` (structural,
+  inside ``personalized_pagerank``) and the executor's ``fn_builds`` delta
+  is asserted 0; both are hard failures here, not just recorded numbers.
+* **incremental PPR** — after a small in-place mutation
+  (``replace_rows`` of one node, ~2% weight change), a warm-started
+  re-solve must spend fewer kernel dispatches than the cold re-solve AND
+  return bit-identical scores (the canonicalized-refinement contract).
+* **top-k eigen** — deflated power iterations/eigenpair on the symmetric
+  normalized adjacency, residuals asserted.
+
+Results merge into ``BENCH_topk_spmv.json`` under ``graph_workloads``.
+``--smoke`` (CI) runs a tiny graph through the same assertions, no json.
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from benchmarks.bench_io import merge_into_bench_json, time_paired
+except ImportError:
+    from bench_io import merge_into_bench_json, time_paired
+
+
+def run(verbose: bool = True, smoke: bool = False) -> dict:
+    from repro.core import graph as graph_lib
+    from repro.core.topk_spmv import (
+        MutableTopKSpMVIndex,
+        TopKSpMVConfig,
+        query_executor,
+    )
+
+    if smoke:
+        n, cores, repeats, eig_k = 96, 2, 2, 2
+    else:
+        n, cores, repeats, eig_k = 2048, 4, 7, 3
+    alpha, tol = 0.85, 1e-5
+
+    csr = graph_lib.synthetic_graph_csr("er", n, seed=3)
+    dense = jnp.asarray(csr.to_dense())
+    cfg = TopKSpMVConfig(k=8, num_partitions=cores)
+    idx = MutableTopKSpMVIndex(csr, cfg)
+    ex = query_executor(cfg)
+
+    # --- ms/iteration: fused accumulate dispatch vs dense matvec oracle ----
+    p = jnp.asarray(np.eye(n, dtype=np.float32)[5])
+    a = jnp.float32(alpha)
+    b = jnp.float32(1.0 - alpha)
+
+    @jax.jit
+    def dense_step(y):
+        return a * (dense @ y) + b * p
+
+    y_seed = dense_step(p)  # compile + a non-trivial iterate to time with
+
+    ts = time_paired(
+        {
+            "kernel": lambda: ex.spmv(
+                y_seed, idx.packed, alpha=a, beta=b, y=p, path="accumulate"
+            ).block_until_ready(),
+            "dense": lambda: dense_step(y_seed).block_until_ready(),
+        },
+        repeats,
+    )
+    kernel_us = float(np.median(ts["kernel"])) * 1e6
+    dense_us = float(np.median(ts["dense"])) * 1e6
+
+    # --- PPR solve: convergence + structural zero-transfer/zero-retrace ----
+    res = graph_lib.personalized_pagerank(idx, 5, alpha=alpha, tol=tol)
+    assert res.converged, "PPR failed to converge on the bench fixture"
+    assert res.retraces == 0, f"PPR iterations retraced {res.retraces}x"
+    oracle = graph_lib.dense_ppr_oracle(
+        csr.to_dense(), np.eye(n, dtype=np.float32)[5], alpha
+    )
+    l1_err = float(np.abs(res.scores.astype(np.float64) - oracle).sum())
+    assert l1_err < 1e-5, f"PPR L1 error vs dense oracle: {l1_err}"
+
+    # --- incremental re-solve after a small mutation -----------------------
+    seg = csr.row_slice(7, 8)
+    idx.replace_rows(
+        [7], [(seg.indices, (seg.data * 1.02).astype(np.float32))]
+    )
+    cold = graph_lib.personalized_pagerank(idx, 5, alpha=alpha, tol=tol)
+    warm = graph_lib.personalized_pagerank(
+        idx, 5, alpha=alpha, tol=tol, warm_start=res.scores
+    )
+    assert np.array_equal(cold.scores, warm.scores), (
+        "incremental PPR diverged bitwise from the cold re-solve"
+    )
+    assert warm.iterations < cold.iterations, (
+        f"warm start saved nothing: {warm.iterations} vs {cold.iterations}"
+    )
+    assert warm.retraces == 0 and cold.retraces == 0
+
+    # --- top-k eigenpairs on the symmetric fixture -------------------------
+    scsr = graph_lib.synthetic_graph_csr(
+        "ba", max(n // 4, 64), seed=1, symmetric=True
+    )
+    eidx = MutableTopKSpMVIndex(scsr, cfg)
+    eig = graph_lib.topk_eigen(eidx, eig_k, tol=1e-5, max_iters=3000)
+    assert eig.converged and eig.retraces == 0
+    sdense = scsr.to_dense().astype(np.float64)
+    for lam, v in zip(eig.values, eig.vectors.T):
+        r = float(np.linalg.norm(sdense @ v - lam * v))
+        assert r <= 1e-4, f"eigen residual {r} for lambda={lam}"
+
+    payload = {
+        "name": "graph_workloads",
+        "us_per_call": kernel_us,
+        "derived": {
+            "n_nodes": n,
+            "nnz": csr.nnz,
+            "kernel_us_per_iteration": kernel_us,
+            "dense_oracle_us_per_iteration": dense_us,
+            "kernel_vs_dense_ratio": kernel_us / max(dense_us, 1e-9),
+            "ppr_iterations": res.iterations,
+            "ppr_refine_iterations": res.refine_iterations,
+            "ppr_l1_error_vs_oracle": l1_err,
+            "ppr_retraces": res.retraces,
+            "zero_h2d_transfers": True,   # structural: guard active in-loop
+            "incremental_cold_iterations": cold.iterations,
+            "incremental_warm_iterations": warm.iterations,
+            "incremental_speedup": cold.iterations / max(warm.iterations, 1),
+            "incremental_bit_identical": True,  # asserted above
+            "eigen_k": eig_k,
+            "eigen_iterations": list(eig.iterations),
+            "eigen_max_residual": float(np.max(eig.residuals)),
+        },
+    }
+    if verbose:
+        d = payload["derived"]
+        print(
+            f"[graph_workloads] n={n} kernel {kernel_us:.1f} us/iter "
+            f"(dense oracle {dense_us:.1f}), ppr {d['ppr_iterations']} iters "
+            f"(L1 err {l1_err:.1e}, 0 retraces), incremental "
+            f"{d['incremental_warm_iterations']}/{d['incremental_cold_iterations']}"
+            f" iters ({d['incremental_speedup']:.2f}x), eigen iters "
+            f"{d['eigen_iterations']}"
+        )
+    if not smoke:
+        merge_into_bench_json(payload, section="graph_workloads")
+    return payload
+
+
+if __name__ == "__main__":
+    run(verbose=True, smoke="--smoke" in sys.argv[1:])

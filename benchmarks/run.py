@@ -7,7 +7,9 @@ paths), the serve-while-ingest churn axis (both signature modes with
 retrace counting), the 8-simulated-device sharded serving plane
 (bit-identity + transfer-guard/retrace assertions), and the open-loop
 arrival sweep (micro-batching frontend beats fixed-Q=1 at equal-or-better
-p99, zero retraces across drifting Q) — no json writes.
+p99, zero retraces across drifting Q), and the iterative graph workloads
+(accumulate-mode PPR/eigen: parity, zero-transfer/zero-retrace loops,
+bit-identical incremental re-solves) — no json writes.
 """
 from __future__ import annotations
 
@@ -22,6 +24,7 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 def main(smoke: bool = False) -> None:
     from benchmarks import (
         bench_arrival_sweep,
+        bench_graph_workloads,
         bench_kernel_paths,
         bench_recovery,
         bench_sharded_serving,
@@ -36,13 +39,15 @@ def main(smoke: bool = False) -> None:
 
     if smoke:
         mods = [bench_kernel_paths, bench_streaming_updates,
-                bench_sharded_serving, bench_recovery, bench_arrival_sweep]
+                bench_sharded_serving, bench_recovery, bench_arrival_sweep,
+                bench_graph_workloads]
         kwargs, banner = {"smoke": True}, " [smoke]"
     else:
         mods = [table1_precision, table2_designs, fig5_throughput,
                 fig6_roofline, fig7_accuracy, kernel_validation,
                 bench_kernel_paths, bench_streaming_updates,
-                bench_sharded_serving, bench_recovery, bench_arrival_sweep]
+                bench_sharded_serving, bench_recovery, bench_arrival_sweep,
+                bench_graph_workloads]
         kwargs, banner = {}, ""
     rows = []
     for mod in mods:

@@ -8,6 +8,14 @@ from repro.core.bscsr import (
     sparsify_topm,
 )
 from repro.core.faults import FaultInjected, FaultPlan, INJECTION_POINTS
+from repro.core.graph import (
+    EigenResult,
+    PPRResult,
+    dense_ppr_oracle,
+    personalized_pagerank,
+    synthetic_graph_csr,
+    topk_eigen,
+)
 from repro.core.partition import (
     PartitionPlan,
     merge_topk,

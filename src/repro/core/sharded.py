@@ -93,12 +93,49 @@ from repro.core.topk_spmv import (
 from repro.kernels import executor as executor_lib
 from repro.kernels import ops as kernel_ops
 from repro.kernels.bscsr_topk_spmv import (
+    bscsr_spmv,
     bscsr_topk_spmv,
     bscsr_topk_spmv_multiquery,
 )
 from repro.sharding import rules as rules_lib
 
 _INVALID = int(bscsr_lib.INVALID_ROW)
+
+
+@functools.lru_cache(maxsize=None)
+def _combine_partials_fn(n_pools: int):
+    """Jitted ``alpha * sum(partials) + beta * y`` for the per-shard
+    accumulate path.  Each global row lives on exactly one shard, so the
+    off-owner partials contribute literal zeros and the sum is bit-identical
+    to the single-device scatter (adding 0.0 never perturbs an f32)."""
+
+    def run(alpha, beta, y, *parts):
+        acc = parts[0]
+        for p in parts[1:]:
+            acc = acc + p
+        return alpha * acc + beta * y
+
+    return jax.jit(run)
+
+
+@functools.lru_cache(maxsize=None)
+def _pinned_zeros(n: int, device=None):
+    """A cached device-resident zero vector (per-shard accumulate partials
+    pass it as the fn's ``y`` arg with beta pinned to 0)."""
+    if device is None:
+        return jnp.zeros((n,), jnp.float32)
+    return jax.device_put(np.zeros((n,), np.float32), device)
+
+
+@functools.lru_cache(maxsize=None)
+def _pinned_unit_scalars(device=None):
+    """Cached (1.0, 0.0) f32 device scalars for partial-product dispatches."""
+    if device is None:
+        return jnp.asarray(1.0, jnp.float32), jnp.asarray(0.0, jnp.float32)
+    return (
+        jax.device_put(np.float32(1.0), device),
+        jax.device_put(np.float32(0.0), device),
+    )
 
 
 @functools.lru_cache(maxsize=None)
@@ -611,6 +648,58 @@ class ShardedTopKSpMVIndex:
         merge = _host_merge_fn(len(pools_v), self.config.big_k, batched)
         return merge(self._gsent_scalar(merge_dev), *pools_v, *pools_r)
 
+    def spmv(self, x, alpha, beta, y, use_kernel: bool = True):
+        """``alpha * A @ x + beta * y`` over the sharded collection.
+
+        The accumulate-mode (``select_topk=False``) sharded dispatch: each
+        shard computes its rows' partial products in the *global* row space
+        (``y``'s length fixes it), and the partials reduce with a dense
+        ``psum`` over the shard axis instead of the top-k tree merge —
+        bit-identical to the single-device scatter because every global row
+        is owned by exactly one shard (the off-owner lanes are literal
+        zeros).  Iterative graph solvers (``core.graph``) drive this with
+        device-pinned ``alpha``/``beta``/``y`` for zero-transfer steps.
+        """
+        n_out = int(y.shape[0])
+        if n_out < self._next_gid:
+            raise ValueError(
+                f"y has {n_out} rows but the global id space holds "
+                f"{self._next_gid} — accumulate output must cover every id"
+            )
+        if self._dead_shards:
+            raise RuntimeError(
+                "accumulate-mode SpMV needs every shard (a degraded partial "
+                f"product is silently wrong); recover shards "
+                f"{sorted(self._dead_shards)} first"
+            )
+        if self._spmd is not None and use_kernel:
+            return self._spmd.spmv(x, alpha, beta, y)
+        return self._per_shard_spmv(x, alpha, beta, y, use_kernel)
+
+    def _per_shard_spmv(self, x, alpha, beta, y, use_kernel):
+        """One accumulate dispatch per shard + jitted partial-sum combine."""
+        ex = query_executor(self._local_config)
+        path = "accumulate" if use_kernel else "accumulate_ref"
+        layout = None
+        if use_kernel and self._hetero and not self.native_groups:
+            layout = "split"    # f32-twin fallback: exactly-dequantized
+        merge_dev = self._merge_device()
+        n_out = int(y.shape[0])
+        parts = []
+        for s, sh in enumerate(self._shards):
+            dev = self._shard_device(s)
+            one, zero = _pinned_unit_scalars(dev)
+            p = ex.spmv(
+                x, sh.packed, alpha=one, beta=zero,
+                y=_pinned_zeros(n_out, dev), path=path, stream_layout=layout,
+                row_map=self._row_map(s),
+                row_map_key=("l2g", self._generation), device=dev,
+            )
+            if dev is not None and dev != merge_dev:
+                p = jax.device_put(p, merge_dev)   # device-to-device
+            parts.append(p)
+        return _combine_partials_fn(len(parts))(alpha, beta, y, *parts)
+
     def recover_shard(self, s: int) -> None:
         """Return a dead shard to serving, re-pinned from its host copy.
 
@@ -797,7 +886,70 @@ class _SpmdDispatcher:
 
     # -- compiled fn ---------------------------------------------------------
 
+    def _build_spmv(self, n_out: int, args):
+        """One compiled accumulate fn: per-shard kernel + global-row scatter,
+        reduced with a dense ``psum`` over the shard axis (no top-k merge).
+
+        Replicas each hold a full copy of every shard, so the psum over
+        "shard" alone already yields the complete ``A @ x`` on every device —
+        the replica axis needs no reduction (all replica groups compute the
+        same value), and every in/out other than the matrix streams is
+        replicated.
+        """
+        o = self.owner
+        cfg = o.config
+        mesh = self.mesh
+        cps = o._cps
+        layout = self.layout
+        n_streams = 1 if layout == "fused" else 3
+        max_slots = int(args[n_streams].shape[2])  # common slot bucket
+        pack0 = o._shards[0].packed
+        kwargs = dict(
+            n_rows=max_slots,
+            packets_per_step=cfg.packets_per_step,
+            fmt_name=pack0.value_format.name,
+            gather_mode=self._gather,
+            inner_loop=cfg.inner_loop,
+            stream_layout=layout, block_size=pack0.block_size,
+            interpret=self._interpret,
+        )
+
+        def body(x, alpha, beta, y, *arrs):
+            streams = [a[0] for a in arrs[:n_streams]]
+            slot = arrs[n_streams][0]
+            nslots = arrs[n_streams + 1][0]
+            tombs = arrs[n_streams + 2][0]
+            l2g = arrs[n_streams + 3][0]
+            sums = bscsr_spmv(jnp.asarray(x, jnp.float32), *streams, **kwargs)
+            partial = kernel_ops.scatter_slot_sums(
+                sums, jnp.zeros((cps,), jnp.int32), nslots, n_out,
+                slot_to_row=slot, tombstones=tombs, row_map=l2g,
+            )
+            ax = jax.lax.psum(partial, "shard")
+            return alpha * ax + beta * y
+
+        rep = PartitionSpec()
+        shard_spec = rules_lib.logical_to_spec(
+            ("topk_shards",), (self.s_count,), mesh
+        )
+        in_specs = (
+            (rep, rep, rep, rep)
+            + (shard_spec,) * (len(args) - 1) + (rep,)
+        )
+        out_specs = rep
+        fn = _shard_map(
+            body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            **_SHARD_MAP_KW,
+        )
+        return jax.jit(
+            fn,
+            in_shardings=tuple(NamedSharding(mesh, sp) for sp in in_specs),
+            out_shardings=NamedSharding(mesh, out_specs),
+        )
+
     def _build(self, q: Optional[int], args):
+        if isinstance(q, tuple) and q[0] == "spmv":
+            return self._build_spmv(q[1], args)
         o = self.owner
         cfg = o.config
         mesh = self.mesh
@@ -924,6 +1076,22 @@ class _SpmdDispatcher:
         fn = self._fn(None, args, sig)
         self.dispatches += 1
         return fn(self._place_x(x, PartitionSpec()), *args)
+
+    def _place_rep(self, v):
+        """Replicate a scalar/vector across the mesh (no-op if pre-placed)."""
+        sharding = NamedSharding(self.mesh, PartitionSpec())
+        if isinstance(v, jax.Array) and v.sharding == sharding:
+            return v   # already replicated: zero transfers
+        return jax.device_put(jnp.asarray(v, jnp.float32), sharding)
+
+    def spmv(self, x, alpha, beta, y):
+        args, sig = self._sync()
+        fn = self._fn(("spmv", int(y.shape[0])), args, sig)
+        self.dispatches += 1
+        return fn(
+            self._place_x(x, PartitionSpec()), self._place_rep(alpha),
+            self._place_rep(beta), self._place_rep(y), *args,
+        )
 
     def query_batched(self, xs):
         args, sig = self._sync()

@@ -285,6 +285,34 @@ class SparseEmbeddingIndex:
         """Re-encode live rows, restoring base-only bytes/nnz."""
         self.index.compact()
 
+    # -- iterative graph workloads (accumulate-mode SpMV) -------------------
+
+    def personalized_pagerank(self, seeds, **kwargs):
+        """Personalized PageRank over this index's rows as a graph operator.
+
+        Requires a square index (rows indexed by the same id space as
+        columns — e.g. built from ``graph.synthetic_graph_csr`` or any
+        adjacency-shaped collection).  Damped power iteration on the
+        accumulate-mode kernel: one fused ``y = alpha*A@x + beta*y``
+        dispatch per step, device-resident between steps, warm-startable
+        for incremental re-solves after ``upsert``/``delete``.  See
+        :func:`repro.core.graph.personalized_pagerank` for the keyword
+        surface (``alpha``, ``tol``, ``warm_start``, ...).
+        """
+        from repro.core import graph as graph_lib
+
+        return graph_lib.personalized_pagerank(self.index, seeds, **kwargs)
+
+    def topk_eigen(self, k: int, **kwargs):
+        """Top-k eigenpairs of this (symmetric, square) index's operator.
+
+        Deflated power iteration on the accumulate-mode kernel; see
+        :func:`repro.core.graph.topk_eigen`.
+        """
+        from repro.core import graph as graph_lib
+
+        return graph_lib.topk_eigen(self.index, k, **kwargs)
+
     def stats(self) -> SimilaritySearchStats:
         if self.is_sharded:
             agg = self.index.aggregate_stats()

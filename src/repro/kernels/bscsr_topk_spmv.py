@@ -503,6 +503,178 @@ def bscsr_topk_spmv(
 
 
 # ---------------------------------------------------------------------------
+# Accumulate mode (beyond-paper): y = A @ x without the top-k select stage.
+#
+# Iterative graph workloads (PPR, power-iteration eigensolvers) run the SAME
+# packet stream but keep every row's score: stages 1-3 are identical, and
+# stage 4's k-sized scratchpad is replaced by a dense per-core accumulator of
+# one f32 per slot.  Each row completes exactly once across the whole stream
+# (stage 3 closes a segment exactly when its row-boundary flag arrives), and
+# within one step the completed segment ids are distinct, so the scatter-add
+# indices never collide: the accumulator is a plain "write each row's sum at
+# its slot" with incomplete/carry lanes parked in a discarded overflow slot —
+# the same trick `_segment_sums_linear` uses.  The open trailing sentinel row
+# never completes, so flag-free padding packets and bucketed slot budgets add
+# exactly nothing (phantom slots stay 0.0 and are masked by the caller's
+# slot->row scatter, NOT by `finalize_candidates`, which this mode skips
+# entirely).  alpha/beta scaling, tombstone masking, and the slot->global-row
+# scatter all live in the jnp epilogue (`ops.scatter_slot_sums`) inside the
+# same jit — the kernel emits raw per-core slot sums only.
+# ---------------------------------------------------------------------------
+
+def _spmv_accum_kernel(
+    x_ref,            # (M,) f32                      VMEM (URAM analogue)
+    *refs,            # split: vals (1,T,B), cols (1,T,B), flags (1,T,B//32)
+                      # fused: words (1,T,W) int32 — ONE contiguous stream
+                      # then output y (1, n_rows) f32 and scratch
+                      # y_acc (n_rows+1,) f32 VMEM (last = overflow slot),
+                      # carry_row (1,) i32 SMEM, carry_sum (1,) f32 SMEM
+    n_rows: int,
+    num_steps: int,
+    fmt: ValueFormat,
+    gather_mode: str,
+    inner_loop: str,
+    stream_layout: str,
+    block: int,
+    col_words: int,
+):
+    if stream_layout == "fused":
+        words_ref, y_ref, y_acc, carry_row, carry_sum = refs
+        num_t = words_ref.shape[1]
+    else:
+        (vals_ref, cols_ref, flags_ref, y_ref,
+         y_acc, carry_row, carry_sum) = refs
+        num_t = vals_ref.shape[1]
+    linear_seg, _ = _inner_loop_flags(inner_loop)  # stage 4 has no variants here
+    step = pl.program_id(1)
+
+    @pl.when(step == 0)
+    def _init():
+        y_acc[...] = jnp.zeros((n_rows + 1,), jnp.float32)
+        carry_row[0] = -1
+        carry_sum[0] = 0.0
+
+    tb = num_t * block
+
+    # ---- stages 1-3: identical to the top-k kernel ----
+    if stream_layout == "fused":
+        flag_words, c, v = _decode_fused_tile(words_ref, block, fmt, col_words)
+    else:
+        v, c = _split_stage1(vals_ref, cols_ref, tb, fmt)
+        flag_words = flags_ref[...]
+    x = x_ref[...].astype(jnp.float32)
+    prods = v * _gather_x(x, c, gather_mode)
+
+    f = _unpack_flags_tile(flag_words, tb)
+    seg = jnp.cumsum(f)
+    s_last = seg[-1]
+    seg_ids = jnp.arange(tb + 1, dtype=jnp.int32)
+    if linear_seg:
+        seg_sums = _segment_sums_linear(prods, f, seg, tb)
+    else:
+        seg_sums = _segment_sums_onehot(prods, seg, tb)
+
+    row0 = carry_row[0]
+    part = carry_sum[0]
+    cand_v = seg_sums + jnp.where(seg_ids == 0, part, 0.0)
+    cand_r = row0 + seg_ids
+    complete = (seg_ids < s_last) & (cand_r >= 0)  # last segment stays open
+    carry_row[0] = row0 + s_last
+    carry_sum[0] = seg_sums[s_last] + jnp.where(s_last == 0, part, 0.0)
+
+    # ---- stage 4': dense accumulate — each completed row lands at its slot --
+    # `complete` implies 0 <= cand_r < n_rows, so no clip; everything else is
+    # parked in the overflow slot and discarded at emit time.
+    slot = jnp.where(complete, cand_r, n_rows).astype(jnp.int32)
+    y_acc[...] = y_acc[...].at[slot].add(jnp.where(complete, cand_v, 0.0))
+
+    @pl.when(step == num_steps - 1)
+    def _emit():
+        y_ref[...] = y_acc[:n_rows].reshape(1, n_rows)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n_rows", "packets_per_step", "fmt_name", "gather_mode",
+        "inner_loop", "stream_layout", "block_size", "interpret",
+    ),
+)
+def bscsr_spmv(
+    x: jnp.ndarray,        # (M,) float32
+    vals: jnp.ndarray,     # split: (C, P, B) storage dtype; fused: (C, P, W) i32
+    cols: jnp.ndarray = None,   # (C, P, B) int16/int32 (split only)
+    flags: jnp.ndarray = None,  # (C, P, B//32) int32   (split only)
+    *,
+    n_rows: int,           # per-core slot budget (may be a bucketed pad)
+    packets_per_step: int = 2,
+    fmt_name: str = "F32",
+    gather_mode: str = "take",
+    inner_loop: str = "linear",
+    stream_layout: str = "split",
+    block_size: int = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Accumulate-mode kernel pass: per-core dense slot sums, (C, n_rows) f32.
+
+    This is ``select_topk=False``: the top-k scratchpad never runs and every
+    slot's full row sum leaves the kernel.  ``inner_loop`` still selects the
+    stage-2 segmented-sum variant ("linear"/"linear-seg" -> cumsum-difference,
+    "legacy"/"linear-topk" -> one-hot matmul); the stage-4 half of each mode
+    is vacuous here.  Callers map slots to global rows, mask tombstones, and
+    apply alpha/beta via ``ops.scatter_slot_sums`` — `finalize_candidates`
+    must NOT run on this output.
+    """
+    fmt = STREAM_FORMATS[fmt_name]
+    if isinstance(fmt, TaggedFormatClass) and stream_layout != "fused":
+        raise ValueError(
+            f"tagged format class {fmt_name!r} requires stream_layout='fused'"
+        )
+    n_cores, n_packets, last = vals.shape
+    if stream_layout == "fused":
+        if block_size is None:
+            raise ValueError("stream_layout='fused' requires block_size")
+        block, width = block_size, last
+        col_words = _fused_geometry(width, block, fmt)
+        streams = (vals,)
+    else:
+        block, width = last, last
+        col_words = 0
+        streams = (vals, cols, flags)
+    t = packets_per_step
+    assert n_packets % t == 0, "pad packet count to a multiple of packets_per_step"
+    num_steps = n_packets // t
+
+    kernel = functools.partial(
+        _spmv_accum_kernel,
+        n_rows=n_rows,
+        num_steps=num_steps,
+        fmt=fmt,
+        gather_mode=gather_mode,
+        inner_loop=inner_loop,
+        stream_layout=stream_layout,
+        block=block,
+        col_words=col_words,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n_cores, num_steps),
+        in_specs=[
+            pl.BlockSpec((x.shape[0],), lambda c, i: (0,)),
+            *_stream_specs(stream_layout, t, block, width),
+        ],
+        out_specs=[pl.BlockSpec((1, n_rows), lambda c, i: (c, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n_cores, n_rows), jnp.float32)],
+        scratch_shapes=[
+            pltpu.VMEM((n_rows + 1,), jnp.float32),
+            pltpu.SMEM((1,), jnp.int32),
+            pltpu.SMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, *streams)[0]
+
+
+# ---------------------------------------------------------------------------
 # Multi-query variant (beyond-paper): Q queries share one stream pass.
 #
 # The paper's design answers ONE query per pass, so intensity is capped at

@@ -69,6 +69,7 @@ from repro.core.quantization import FORMATS
 from repro.kernels import ops
 from repro.kernels import ref as ref_lib
 from repro.kernels.bscsr_topk_spmv import (
+    bscsr_spmv,
     bscsr_topk_spmv,
     bscsr_topk_spmv_multiquery,
 )
@@ -343,10 +344,11 @@ class QueryExecutor:
 
         This IS the per-query dispatch overhead: a steady-state ``query`` is
         ``prepare`` plus the compiled call.  ``q=None`` selects the
-        single-query fn; otherwise the (padded) batch size.
+        single-query fn; otherwise the (padded) batch size — or, for the
+        accumulate paths, the ``("spmv", n_out)`` static-output key.
         """
-        if path == "reference":
-            layout = "split"  # the oracle reads the split arrays
+        if path in ("reference", "accumulate_ref"):
+            layout = "split"  # the oracles read the split arrays
         else:
             layout = stream_layout or packed.stream_layout
         snap = device_snapshot(
@@ -450,6 +452,38 @@ class QueryExecutor:
             xs = _query_padder(bucket - q)(xs)
         vals, rows = fn(xs, *snap.call_args(n_rows))
         return _query_unpadder(q)(vals, rows) if bucket != q else (vals, rows)
+
+    def spmv(
+        self,
+        x: jnp.ndarray,
+        packed: ops.PackedPartitions,
+        *,
+        alpha: jnp.ndarray,
+        beta: jnp.ndarray,
+        y: jnp.ndarray,
+        path: str = "accumulate",
+        stream_layout: Optional[str] = None,
+        row_map=None,
+        row_map_key=None,
+        device=None,
+    ) -> jnp.ndarray:
+        """``alpha * A @ x + beta * y`` with the top-k select stage skipped.
+
+        The iterative-workload dispatch: one compiled call per step, with the
+        dense output vector (and ``x``/``alpha``/``beta``, when the caller
+        pins them) device-resident between iterations — zero host round-trips
+        per step once warm.  ``y``'s (static) length fixes the output row
+        space and is part of the fn cache key; ``finalize_candidates`` never
+        runs on this path (masking lives in ``ops.scatter_slot_sums``).
+        ``path="accumulate_ref"`` runs the jnp oracle through the same plane.
+        """
+        n_out = int(y.shape[0])
+        fn, snap = self.prepare(
+            packed, ("spmv", n_out), path, stream_layout,
+            row_map=row_map, row_map_key=row_map_key, device=device,
+        )
+        self.dispatches += 1
+        return fn(x, alpha, beta, y, *snap.call_args())
 
     def cache_info(self) -> dict:
         # prune dead pins so the count (and this set) track live pins only;
@@ -579,8 +613,78 @@ class QueryExecutor:
                         slot_to_row=slot, tombstones=tombs, row_map=rmap,
                     )
 
+        elif path in ("accumulate", "accumulate_ref"):
+            # q is the ("spmv", n_out) key: the dense output length is static
+            # (it shapes the scatter), everything else — x, alpha, beta, y and
+            # the snapshot tail — is traced, so warm iterations neither
+            # retrace nor transfer.  finalize_candidates NEVER runs here.
+            _, n_out = q
+            if path == "accumulate_ref":
+
+                def run(x, alpha, beta, y, *arrs):
+                    streams, row_starts, rows_per, n_rows, slot, tombs, rmap = (
+                        split_args(arrs)
+                    )
+                    vals, cols, flags = streams
+                    sums = ref_lib.bscsr_slot_sums_stacked(
+                        vals, cols, flags, jnp.asarray(x, jnp.float32),
+                        max_slots, fmt,
+                    )
+                    ax = ops.scatter_slot_sums(
+                        sums, row_starts, rows_per, n_out,
+                        slot_to_row=slot, tombstones=tombs, row_map=rmap,
+                    )
+                    return alpha * ax + beta * y
+
+            else:
+                kwargs = dict(
+                    n_rows=max_slots,
+                    packets_per_step=self.packets_per_step,
+                    fmt_name=snap.fmt_name, gather_mode=self.gather_mode,
+                    inner_loop=self.inner_loop, stream_layout=layout,
+                    block_size=snap.block_size, interpret=self.interpret,
+                )
+                if snap.groups_meta is not None:
+                    num_cores = snap.num_cores
+
+                    def run(x, alpha, beta, y, *arrs):
+                        (streams, row_starts, rows_per, n_rows, slot, tombs,
+                         rmap) = split_args(arrs)
+                        xq = jnp.asarray(x, jnp.float32)
+                        sums = jnp.zeros((num_cores, max_slots), jnp.float32)
+                        for (cname, cores), words in zip(
+                            snap.groups_meta, streams
+                        ):
+                            gs = bscsr_spmv(
+                                xq, words, **dict(kwargs, fmt_name=cname)
+                            )
+                            idx = jnp.asarray(list(cores), jnp.int32)
+                            sums = sums.at[idx].set(gs)
+                        ax = ops.scatter_slot_sums(
+                            sums, row_starts, rows_per, n_out,
+                            slot_to_row=slot, tombstones=tombs, row_map=rmap,
+                        )
+                        return alpha * ax + beta * y
+
+                else:
+
+                    def run(x, alpha, beta, y, *arrs):
+                        (streams, row_starts, rows_per, n_rows, slot, tombs,
+                         rmap) = split_args(arrs)
+                        sums = bscsr_spmv(
+                            jnp.asarray(x, jnp.float32), *streams, **kwargs
+                        )
+                        ax = ops.scatter_slot_sums(
+                            sums, row_starts, rows_per, n_out,
+                            slot_to_row=slot, tombstones=tombs, row_map=rmap,
+                        )
+                        return alpha * ax + beta * y
+
         else:
-            raise ValueError(f"path must be 'kernel' or 'reference', got {path!r}")
+            raise ValueError(
+                "path must be 'kernel', 'reference', 'accumulate' or "
+                f"'accumulate_ref', got {path!r}"
+            )
 
         return jax.jit(run)
 

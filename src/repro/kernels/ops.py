@@ -73,7 +73,11 @@ from repro.core.quantization import (
     width_class_of,
 )
 from repro.kernels import ref as ref_lib
-from repro.kernels.bscsr_topk_spmv import bscsr_topk_spmv, bscsr_topk_spmv_multiquery
+from repro.kernels.bscsr_topk_spmv import (
+    bscsr_spmv,
+    bscsr_topk_spmv,
+    bscsr_topk_spmv_multiquery,
+)
 
 NEG_INF = ref_lib.NEG_INF
 INVALID_ROW = bscsr_lib.INVALID_ROW
@@ -1010,6 +1014,175 @@ def topk_spmv_batched(
     return finalize_candidates_batched(
         lv, lr, big_k=big_k, **_finalize_kwargs(packed)
     )
+
+
+# ---------------------------------------------------------------------------
+# Accumulate mode (select_topk=False): y = alpha * A @ x + beta * y.
+#
+# The top-k select stage never runs: the kernel (or the jnp oracle) emits raw
+# per-core slot sums, and the masking that `finalize_candidates` would have
+# applied to candidates — per-core live-slot counts, slot->row retirement
+# (INVALID_ROW), tombstoned global ids, the sharded plane's local->global
+# row_map — moves HERE, into the dense scatter.  `finalize_candidates` must
+# never see accumulate-mode output (its NEG_INF sentinel algebra is top-k
+# specific); `tests/test_graph_workloads.py` pins this.
+# ---------------------------------------------------------------------------
+
+def scatter_slot_sums(
+    slot_sums: jnp.ndarray,      # (C, L) raw per-core slot sums
+    row_starts: jnp.ndarray,     # (C,)
+    rows_per_part: jnp.ndarray,  # (C,) live candidate slots per core
+    n_out: int,                  # static output length (global row space)
+    slot_to_row: Optional[jnp.ndarray] = None,  # (C, L) slot -> global row
+    tombstones: Optional[jnp.ndarray] = None,   # bool bitmap over global ids
+    row_map: Optional[jnp.ndarray] = None,      # (L2,) local -> global row id
+) -> jnp.ndarray:
+    """Scatter per-core slot sums into one dense (n_out,) vector.
+
+    The accumulate-mode replacement for ``finalize_candidates``: invalid
+    lanes — padded slots past a core's live count, retired slots
+    (``INVALID_ROW``), tombstoned/deleted rows, and sharded-padding rows the
+    ``row_map`` marks invalid — contribute exactly ``0.0`` to ``y`` instead
+    of being masked to NEG_INF.  Each live row occupies exactly one slot on
+    one core, so the scatter-add never sums two live lanes into one output
+    element (load-bearing for the sharded psum bit-identity argument).
+    """
+    c, l = slot_sums.shape
+    slots = jax.lax.broadcasted_iota(jnp.int32, (c, l), 1)
+    valid = slots < rows_per_part[:, None]
+    if slot_to_row is None:
+        rows = slots + row_starts[:, None]
+    else:
+        rows = slot_to_row
+        valid = valid & (rows != INVALID_ROW)
+    if tombstones is not None:
+        safe = jnp.clip(rows, 0, tombstones.shape[0] - 1)
+        valid = valid & ~tombstones[safe]
+    if row_map is not None:
+        safe = jnp.clip(rows, 0, row_map.shape[0] - 1)
+        rows = row_map[safe]
+        valid = valid & (rows != INVALID_ROW)
+    valid = valid & (rows >= 0) & (rows < n_out)
+    contrib = jnp.where(valid, slot_sums, 0.0).reshape(-1)
+    idx = jnp.clip(rows, 0, n_out - 1).reshape(-1)
+    return jnp.zeros((n_out,), jnp.float32).at[idx].add(contrib)
+
+
+def _scatter_kwargs(packed: PackedPartitions) -> dict:
+    """Device-array scatter inputs for a packed snapshot (accumulate analogue
+    of ``_finalize_kwargs`` — note: no ``n_rows`` sentinel; the caller fixes
+    the static output length)."""
+    kw = dict(
+        row_starts=jnp.asarray(packed.row_starts),
+        rows_per_part=jnp.asarray(packed.candidate_slots),
+    )
+    if packed.slot_to_row is not None:
+        kw["slot_to_row"] = jnp.asarray(packed.slot_to_row)
+    if packed.has_tombstones:
+        kw["tombstones"] = jnp.asarray(packed.tombstones)
+    return kw
+
+
+def _grouped_slot_sums(
+    x: jnp.ndarray,
+    packed: PackedPartitions,
+    *,
+    packets_per_step: int,
+    gather_mode: str,
+    inner_loop: str,
+    interpret: bool,
+) -> jnp.ndarray:
+    """Mixed-precision accumulate dispatch: one kernel call per width class,
+    per-core slot sums scattered back into snapshot ``(C, L)`` order."""
+    sums = jnp.zeros((packed.num_cores, packed.max_slots), jnp.float32)
+    for g in packed.groups:
+        gs = bscsr_spmv(
+            x, jnp.asarray(g.words),
+            n_rows=packed.max_slots, packets_per_step=packets_per_step,
+            fmt_name=g.class_name, gather_mode=gather_mode,
+            inner_loop=inner_loop, stream_layout="fused",
+            block_size=packed.block_size, interpret=interpret,
+        )
+        cores = jnp.asarray(np.asarray(g.cores, np.int32))
+        sums = sums.at[cores].set(gs)
+    return sums
+
+
+def bscsr_spmv_blocked(
+    x: jnp.ndarray,
+    packed: PackedPartitions,
+    *,
+    alpha: float | jnp.ndarray = 1.0,
+    beta: float | jnp.ndarray = 0.0,
+    y: Optional[jnp.ndarray] = None,
+    n_out: Optional[int] = None,
+    packets_per_step: int = 2,
+    gather_mode: str = "take",
+    inner_loop: str = "linear",
+    stream_layout: Optional[str] = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """``y = alpha * A @ x + beta * y`` via the accumulate-mode Pallas kernel.
+
+    The per-call-upload baseline (the accumulate analogue of
+    ``topk_spmv_blocked``); iterative workloads go through
+    ``QueryExecutor.spmv`` instead, which pins the snapshot and keeps ``y``
+    device-resident between iterations.  ``n_out`` defaults to the snapshot's
+    global row space (or ``y``'s length when given).
+    """
+    if n_out is None:
+        n_out = int(y.shape[0]) if y is not None else packed.n_rows_logical
+    layout = stream_layout or packed.stream_layout
+    xd = jnp.asarray(x, jnp.float32)
+    if layout == "fused" and packed.groups is not None:
+        sums = _grouped_slot_sums(
+            xd, packed, packets_per_step=packets_per_step,
+            gather_mode=resolve_gather_mode(gather_mode),
+            inner_loop=inner_loop, interpret=interpret,
+        )
+    else:
+        layout, streams = _kernel_streams(packed, stream_layout)
+        sums = bscsr_spmv(
+            xd, *streams,
+            n_rows=packed.max_slots,
+            packets_per_step=packets_per_step,
+            fmt_name=packed.value_format.name,
+            gather_mode=resolve_gather_mode(gather_mode),
+            inner_loop=inner_loop,
+            stream_layout=layout,
+            block_size=packed.block_size,
+            interpret=interpret,
+        )
+    ax = scatter_slot_sums(sums, n_out=n_out, **_scatter_kwargs(packed))
+    if y is None:
+        return alpha * ax
+    return alpha * ax + beta * jnp.asarray(y, jnp.float32)
+
+
+def bscsr_spmv_reference(
+    x: jnp.ndarray,
+    packed: PackedPartitions,
+    *,
+    alpha: float | jnp.ndarray = 1.0,
+    beta: float | jnp.ndarray = 0.0,
+    y: Optional[jnp.ndarray] = None,
+    n_out: Optional[int] = None,
+) -> jnp.ndarray:
+    """Accumulate mode via the pure-jnp oracle (same masking epilogue)."""
+    if n_out is None:
+        n_out = int(y.shape[0]) if y is not None else packed.n_rows_logical
+    sums = ref_lib.bscsr_slot_sums_stacked(
+        jnp.asarray(packed.vals),
+        jnp.asarray(packed.cols),
+        jnp.asarray(packed.flags),
+        jnp.asarray(x, jnp.float32),
+        packed.max_slots,
+        packed.value_format,
+    )
+    ax = scatter_slot_sums(sums, n_out=n_out, **_scatter_kwargs(packed))
+    if y is None:
+        return alpha * ax
+    return alpha * ax + beta * jnp.asarray(y, jnp.float32)
 
 
 def topk_spmv_reference(

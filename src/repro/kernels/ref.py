@@ -122,6 +122,29 @@ def bscsr_topk_ref_stacked(
     return jax.vmap(one_core)(vals, cols, flags, rows_per_core)
 
 
+def bscsr_slot_sums_stacked(
+    vals: jnp.ndarray,        # (C, P, B) storage dtype
+    cols: jnp.ndarray,        # (C, P, B)
+    flags: jnp.ndarray,       # (C, P, B//32)
+    x: jnp.ndarray,           # (M,) f32
+    max_rows: int,
+    fmt: ValueFormat | str = "F32",
+) -> jnp.ndarray:
+    """Accumulate-mode oracle: every core's raw per-slot row sums, (C, max_rows).
+
+    The dense analogue of ``bscsr_spmv``'s kernel output: no top-k, no
+    NEG_INF masking — phantom/padded slots simply stay 0.0, exactly as the
+    kernel's dense accumulator leaves them (the caller's slot->row scatter is
+    responsible for dropping them, never ``finalize_candidates``).
+    """
+    fmt = FORMATS[fmt] if isinstance(fmt, str) else fmt
+
+    def one_core(v, c, fl):
+        return bscsr_row_scores(v, c, fl, x, max_rows, fmt)
+
+    return jax.vmap(one_core)(vals, cols, flags)
+
+
 def csr_topk_numpy(indptr, indices, data, x, big_k: int):
     """Numpy CSR Top-K — the host-side 'sparse_dot_topn' style baseline."""
     prods = data * x[indices]

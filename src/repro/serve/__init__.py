@@ -1,6 +1,7 @@
 """Serving substrate: batched KV-cache engine, approximate Top-K heads, and
 the serve-while-ingest streaming similarity service with its continuous
 micro-batching request frontend."""
+from repro.serve.graph_ranking import GraphRankingService, RankedNodes
 from repro.serve.frontend import (
     FrontendConfig,
     IntensityModel,

@@ -1,0 +1,657 @@
+"""Oracle-driven iterative-numerics suite for accumulate-mode SpMV + graph
+workloads (PPR / top-k eigen).
+
+Gates the ``select_topk=False`` kernel path (``bscsr_spmv``), its ops/executor
+dispatch, the sharded psum reduction, and the iterative solvers built on top:
+
+* accumulate parity ``y = alpha*A@x + beta*y`` vs a dense jnp reference
+  across all 4 inner loops x 2 stream layouts x value formats (f32 exact to
+  summation tolerance, quantized within a bound computed from the actually
+  dequantized operator);
+* PPR convergence vs a networkx-free dense f64 power-iteration oracle on
+  three graph fixtures, with the zero-retrace counter asserted;
+* eigenpair residuals ``||A v - lambda v||`` and parity vs
+  ``numpy.linalg.eigvalsh``;
+* incremental (warm-started) PPR bit-identical to a cold solve after
+  replace/delete mutations;
+* per-shard accumulate dispatch bit-identical to the combined partials the
+  psum-based SPMD path produces (the 8-device SPMD run lives in the slow
+  subprocess test, mirroring tests/test_sharded.py);
+* merge-plane duplicate-row-id properties (deflation restarts can re-surface
+  already-extracted ids — the tree merge must stay bit-identical to flat);
+* ``select_topk=False`` snapshots never touch ``finalize_candidates`` and
+  tombstoned rows contribute exactly 0.0 to y.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bscsr
+from repro.core import graph as graph_lib
+from repro.core.partition import merge_topk, tree_merge_topk
+from repro.core.sharded import ShardedTopKSpMVIndex
+from repro.core.topk_spmv import (
+    MutableTopKSpMVIndex,
+    TopKSpMVConfig,
+    query_executor,
+)
+from repro.kernels import ops, ref
+from repro.kernels.bscsr_topk_spmv import bscsr_spmv
+from repro.serve import GraphRankingService
+
+try:  # property tests only; the plain tests below must run without hypothesis
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    def given(**kwargs):
+        return lambda fn: pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+    def settings(**kwargs):
+        return lambda fn: fn
+
+    class st:  # stand-in: strategies are built at decoration time
+        integers = staticmethod(lambda *a, **k: None)
+        lists = staticmethod(lambda *a, **k: None)
+        floats = staticmethod(lambda *a, **k: None)
+        tuples = staticmethod(lambda *a, **k: None)
+
+
+INNER_LOOPS = ("linear", "legacy", "linear-seg", "linear-topk")
+LAYOUTS = ("split", "fused")
+
+
+def make_problem(n_rows=180, n_cols=96, mean_nnz=10, seed=0):
+    csr = bscsr.synthetic_embedding_csr(n_rows, n_cols, mean_nnz, "gamma", seed)
+    rng = np.random.default_rng(seed + 1)
+    x = rng.standard_normal(n_cols).astype(np.float32)
+    y = rng.standard_normal(n_rows).astype(np.float32)
+    return csr, x, y
+
+
+def dense_accum(csr, x, alpha, beta, y):
+    return (
+        alpha * (csr.to_dense().astype(np.float64) @ x.astype(np.float64))
+        + beta * y.astype(np.float64)
+    )
+
+
+# ---------------------------------------------------------------------------
+# accumulate-mode parity
+# ---------------------------------------------------------------------------
+
+
+class TestAccumulateParity:
+    @pytest.mark.parametrize("layout", LAYOUTS)
+    @pytest.mark.parametrize("inner_loop", INNER_LOOPS)
+    def test_f32_parity_all_paths(self, inner_loop, layout):
+        csr, x, y = make_problem()
+        packed = ops.pack_partitions(
+            csr, 4, 64, "F32", packets_multiple=2, stream_layout=layout
+        )
+        got = ops.bscsr_spmv_blocked(
+            jnp.asarray(x), packed, alpha=0.7, beta=-0.3, y=jnp.asarray(y),
+            packets_per_step=2, inner_loop=inner_loop,
+        )
+        want = dense_accum(csr, x, 0.7, -0.3, y)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=0, atol=2e-5)
+
+    @pytest.mark.parametrize("fmt", ["BF16", "Q15", "Q7"])
+    def test_quantized_within_calibrated_bound(self, fmt):
+        """Quantized accumulate: exact vs the dequantized operator, and
+        within the per-row dequantization-loss bound vs the f32 operator."""
+        csr, x, y = make_problem(seed=2)
+        packed = ops.pack_partitions(csr, 4, 64, fmt, packets_multiple=2)
+        got = np.asarray(ops.bscsr_spmv_blocked(
+            jnp.asarray(x), packed, alpha=1.0, beta=0.0,
+            y=jnp.zeros(csr.shape[0], jnp.float32), packets_per_step=2,
+        ))
+        # oracle on the SAME quantized values: tight
+        want_q = np.asarray(ops.bscsr_spmv_reference(
+            jnp.asarray(x), packed, alpha=1.0, beta=0.0,
+            y=jnp.zeros(csr.shape[0], jnp.float32), n_out=csr.shape[0],
+        ))
+        np.testing.assert_allclose(got, want_q, rtol=0, atol=2e-5)
+        # vs the unquantized operator: bounded by |A - A_deq| |x| row sums,
+        # i.e. the calibrated loss of the actually-encoded values
+        deq = np.zeros(csr.shape, np.float32)
+        plan = packed.plan
+        for start, size in zip(plan.row_starts, plan.rows_per_partition):
+            sub = csr.row_slice(start, start + size)
+            enc = bscsr.encode_bscsr(sub, packed.block_size, fmt)
+            deq[start:start + size] = bscsr.decode_bscsr(enc).to_dense()
+        bound = np.abs(csr.to_dense() - deq) @ np.abs(x) + 2e-5
+        err = np.abs(got - csr.to_dense() @ x)
+        assert np.all(err <= bound + 1e-7), float((err - bound).max())
+
+    def test_mixed_precision_groups(self):
+        """Per-partition formats (StreamGroups) through the executor path."""
+        csr, x, y = make_problem(seed=3)
+        cfg = TopKSpMVConfig(
+            k=8, num_partitions=4, block_size=64, recall_target=0.9
+        )
+        idx = MutableTopKSpMVIndex(csr, cfg)
+        ex = query_executor(cfg)
+        kw = dict(alpha=jnp.float32(0.5), beta=jnp.float32(0.25),
+                  y=jnp.asarray(y))
+        got = np.asarray(ex.spmv(jnp.asarray(x), idx.packed,
+                                 path="accumulate", **kw))
+        want = np.asarray(ex.spmv(jnp.asarray(x), idx.packed,
+                                  path="accumulate_ref", **kw))
+        np.testing.assert_allclose(got, want, rtol=0, atol=2e-5)
+
+    def test_alpha_beta_identities(self):
+        csr, x, y = make_problem(seed=4)
+        packed = ops.pack_partitions(csr, 2, 64, "F32", packets_multiple=2)
+        xj, yj = jnp.asarray(x), jnp.asarray(y)
+        # alpha=0: pure beta*y, the operator is irrelevant
+        got = ops.bscsr_spmv_blocked(xj, packed, alpha=0.0, beta=2.0, y=yj)
+        np.testing.assert_allclose(np.asarray(got), 2.0 * y, atol=1e-6)
+        # beta=0 with no y: plain A@x
+        got = ops.bscsr_spmv_blocked(xj, packed, alpha=1.0, beta=0.0,
+                                     y=jnp.zeros_like(yj))
+        np.testing.assert_allclose(
+            np.asarray(got), csr.to_dense() @ x, rtol=0, atol=2e-5
+        )
+
+    def test_empty_rows_contribute_zero(self):
+        rng = np.random.default_rng(5)
+        lens = rng.integers(1, 8, size=90)
+        lens[::3] = 0
+        indptr = np.concatenate([[0], np.cumsum(lens)]).astype(np.int64)
+        idx_ = np.concatenate(
+            [np.sort(rng.choice(64, size=l, replace=False))
+             for l in lens if l]
+        ).astype(np.int32)
+        data = rng.standard_normal(int(lens.sum())).astype(np.float32)
+        csr = bscsr.CSRMatrix(indptr, idx_, data, (90, 64))
+        x = rng.standard_normal(64).astype(np.float32)
+        packed = ops.pack_partitions(csr, 3, 64, "F32", packets_multiple=2)
+        got = np.asarray(ops.bscsr_spmv_blocked(
+            jnp.asarray(x), packed, alpha=1.0, beta=0.0,
+            y=jnp.zeros(90, jnp.float32)))
+        assert np.all(got[::3] == 0.0)
+        np.testing.assert_allclose(got, csr.to_dense() @ x, rtol=0, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# select_topk=False semantics: no finalize, tombstones exactly 0
+# ---------------------------------------------------------------------------
+
+
+class TestAccumulateBypassesTopK:
+    def test_finalize_candidates_never_called(self, monkeypatch):
+        """The accumulate path must not touch the top-k finalize plane."""
+        csr, x, _ = make_problem(seed=6)
+        cfg = TopKSpMVConfig(k=8, num_partitions=3, block_size=64,
+                             packets_per_step=2)
+        idx = MutableTopKSpMVIndex(csr, cfg)
+
+        def boom(*a, **k):
+            raise AssertionError(
+                "finalize_candidates called on a select_topk=False path"
+            )
+
+        monkeypatch.setattr(ops, "finalize_candidates", boom)
+        from repro.kernels import executor as executor_mod
+        ex = executor_mod.QueryExecutor(cfg)  # fresh: no cached fns
+        out = ex.spmv(
+            jnp.asarray(x), idx.packed, alpha=jnp.float32(1.0),
+            beta=jnp.float32(0.0),
+            y=jnp.zeros(idx.n_rows_total, jnp.float32), path="accumulate",
+        )
+        np.testing.assert_allclose(
+            np.asarray(out), csr.to_dense() @ x, rtol=0, atol=2e-5
+        )
+        blocked = ops.bscsr_spmv_blocked(
+            jnp.asarray(x), idx.packed, alpha=1.0, beta=0.0,
+            y=jnp.zeros(idx.n_rows_total, jnp.float32),
+        )
+        np.testing.assert_allclose(np.asarray(out), np.asarray(blocked),
+                                   rtol=0, atol=2e-5)
+
+    def test_tombstoned_rows_exactly_zero(self):
+        csr, x, _ = make_problem(seed=7)
+        cfg = TopKSpMVConfig(k=8, num_partitions=3, block_size=64)
+        idx = MutableTopKSpMVIndex(csr, cfg)
+        dead = [4, 17, 33, 100]
+        idx.delete_rows(dead)
+        ex = query_executor(cfg)
+        out = np.asarray(ex.spmv(
+            jnp.asarray(x), idx.packed, alpha=jnp.float32(1.0),
+            beta=jnp.float32(0.0),
+            y=jnp.zeros(idx.n_rows_total, jnp.float32), path="accumulate",
+        ))
+        assert np.all(out[dead] == 0.0)  # exact zero, not small
+        live, gids = idx.live_csr()
+        want = np.zeros(idx.n_rows_total, np.float32)
+        want[gids] = live.to_dense() @ x
+        np.testing.assert_allclose(out, want, rtol=0, atol=2e-5)
+        # beta path: deleted rows still receive their beta*y share (the
+        # operator row is dead, the accumulator slot is not)
+        y = np.random.default_rng(8).standard_normal(
+            idx.n_rows_total).astype(np.float32)
+        out2 = np.asarray(ex.spmv(
+            jnp.asarray(x), idx.packed, alpha=jnp.float32(1.0),
+            beta=jnp.float32(0.5), y=jnp.asarray(y), path="accumulate",
+        ))
+        np.testing.assert_allclose(out2[dead], 0.5 * y[dead], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# sharded accumulate
+# ---------------------------------------------------------------------------
+
+
+class TestShardedAccumulate:
+    def test_per_shard_matches_dense_and_is_deterministic(self):
+        csr, x, y = make_problem(n_rows=160, seed=9)
+        cfg = TopKSpMVConfig(k=8, num_partitions=2, block_size=64)
+        sh = ShardedTopKSpMVIndex(csr, cfg, mesh=None, n_shards=2)
+        xj, yj = jnp.asarray(x), jnp.asarray(y)
+        got = np.asarray(sh.spmv(xj, 0.6, 0.4, yj))
+        np.testing.assert_allclose(
+            got, dense_accum(csr, x, 0.6, 0.4, y), rtol=0, atol=2e-5
+        )
+        again = np.asarray(sh.spmv(xj, 0.6, 0.4, yj))
+        assert np.array_equal(got, again)  # snapshot-stable bits
+
+    def test_per_shard_owner_sums_survive_combination(self):
+        """Off-owner shard partials are literal zeros: the combined result
+        must equal each row's OWNING shard kernel sum bit-for-bit."""
+        csr, x, _ = make_problem(n_rows=120, seed=10)
+        cfg = TopKSpMVConfig(k=8, num_partitions=3, block_size=64)
+        sh = ShardedTopKSpMVIndex(csr, cfg, mesh=None, n_shards=3)
+        xj = jnp.asarray(x)
+        zeros = jnp.zeros(sh.n_rows_total, jnp.float32)
+        combined = np.asarray(sh.spmv(xj, 1.0, 0.0, zeros))
+        ex = query_executor(sh._local_config)
+        per_rows = np.zeros(sh.n_rows_total, np.float32)
+        for s, shard in enumerate(sh._shards):
+            part = np.asarray(ex.spmv(
+                xj, shard.packed, alpha=jnp.float32(1.0),
+                beta=jnp.float32(0.0), y=zeros, path="accumulate",
+                row_map=sh._row_map(s),
+                row_map_key=("l2g", sh._generation),
+            ))
+            owned = part != 0.0
+            per_rows[owned] = part[owned]
+        assert np.array_equal(combined, per_rows)
+
+    def test_mutations_then_spmv(self):
+        csr, x, _ = make_problem(n_rows=140, seed=11)
+        cfg = TopKSpMVConfig(k=8, num_partitions=2, block_size=64)
+        sh = ShardedTopKSpMVIndex(csr, cfg, mesh=None, n_shards=2)
+        single = MutableTopKSpMVIndex(csr, cfg)
+        rng = np.random.default_rng(12)
+        cols = np.sort(rng.choice(96, size=8, replace=False)).astype(np.int32)
+        vals = rng.standard_normal(8).astype(np.float32)
+        sh.replace_rows([7], [(cols, vals)])
+        single.replace_rows([7], [(cols, vals)])
+        sh.delete_rows([11])
+        single.delete_rows([11])
+        ex = query_executor(cfg)
+        xj = jnp.asarray(x)
+        zeros = jnp.zeros(sh.n_rows_total, jnp.float32)
+        got = np.asarray(sh.spmv(xj, 1.0, 0.0, zeros))
+        want = np.asarray(ex.spmv(
+            xj, single.packed, alpha=jnp.float32(1.0), beta=jnp.float32(0.0),
+            y=zeros, path="accumulate",
+        ))
+        np.testing.assert_allclose(got, want, rtol=0, atol=2e-5)
+        assert got[11] == 0.0
+
+    def test_dead_shard_refuses_accumulate(self):
+        csr, x, _ = make_problem(n_rows=96, seed=13)
+        cfg = TopKSpMVConfig(k=8, num_partitions=2, block_size=64)
+        sh = ShardedTopKSpMVIndex(csr, cfg, mesh=None, n_shards=2)
+        sh._dead_shards.add(1)
+        with pytest.raises(RuntimeError, match="every shard"):
+            sh.spmv(jnp.asarray(x), 1.0, 0.0,
+                    jnp.zeros(sh.n_rows_total, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# PPR vs dense oracle
+# ---------------------------------------------------------------------------
+
+
+PPR_FIXTURES = [("ring", 80, 0), ("er", 96, 3), ("ba", 72, 7)]
+
+
+class TestPersonalizedPageRank:
+    @pytest.mark.parametrize("kind,n,seed", PPR_FIXTURES)
+    def test_converges_to_dense_oracle(self, kind, n, seed):
+        csr = graph_lib.synthetic_graph_csr(kind, n, seed=seed)
+        idx = MutableTopKSpMVIndex(csr, TopKSpMVConfig(k=8, num_partitions=2))
+        res = graph_lib.personalized_pagerank(idx, 5, alpha=0.85, tol=1e-5)
+        assert res.converged and res.canonical
+        assert res.retraces == 0, f"{res.retraces} retraces in the loop"
+        oracle = graph_lib.dense_ppr_oracle(
+            csr.to_dense(), np.eye(n, dtype=np.float32)[5], 0.85
+        )
+        l1 = np.abs(res.scores.astype(np.float64) - oracle).sum()
+        assert l1 < 1e-6, f"{kind}: L1 err {l1}"
+        # probability mass is conserved to rounding
+        assert abs(float(res.scores.sum()) - 1.0) < 1e-5
+
+    def test_seed_vector_forms_agree(self):
+        csr = graph_lib.synthetic_graph_csr("er", 96, seed=3)
+        idx = MutableTopKSpMVIndex(csr, TopKSpMVConfig(k=8, num_partitions=2))
+        a = graph_lib.personalized_pagerank(idx, 5, tol=1e-5)
+        b = graph_lib.personalized_pagerank(idx, [5], tol=1e-5)
+        c = graph_lib.personalized_pagerank(idx, {5: 2.0}, tol=1e-5)
+        full = np.zeros(96, np.float32)
+        full[5] = 1.0
+        d = graph_lib.personalized_pagerank(idx, full, tol=1e-5)
+        for other in (b, c, d):
+            assert np.array_equal(a.scores, other.scores)
+
+    def test_validation(self):
+        csr, _, _ = make_problem(n_rows=100, n_cols=64)  # non-square
+        idx = MutableTopKSpMVIndex(csr, TopKSpMVConfig(k=8, num_partitions=2))
+        with pytest.raises(ValueError, match="square"):
+            graph_lib.personalized_pagerank(idx, 0)
+        g = graph_lib.synthetic_graph_csr("er", 64, seed=0)
+        gidx = MutableTopKSpMVIndex(g, TopKSpMVConfig(k=8, num_partitions=2))
+        with pytest.raises(ValueError, match="alpha"):
+            graph_lib.personalized_pagerank(gidx, 0, alpha=1.5)
+        with pytest.raises(ValueError, match="positive mass"):
+            graph_lib.seed_vector(np.zeros(64, np.float32), 64)
+
+    def test_incremental_bit_identical_after_mutations(self):
+        csr = graph_lib.synthetic_graph_csr("er", 96, seed=3)
+        idx = MutableTopKSpMVIndex(csr, TopKSpMVConfig(k=8, num_partitions=4))
+        base = graph_lib.personalized_pagerank(idx, 5, tol=1e-5)
+        # small replace: warm start must SAVE iterations and lose no bits
+        seg = csr.row_slice(7, 8)
+        idx.replace_rows(
+            [7], [(seg.indices, (seg.data * 1.02).astype(np.float32))]
+        )
+        cold = graph_lib.personalized_pagerank(idx, 5, tol=1e-5)
+        warm = graph_lib.personalized_pagerank(
+            idx, 5, tol=1e-5, warm_start=base.scores
+        )
+        assert np.array_equal(cold.scores, warm.scores)
+        assert warm.iterations < cold.iterations
+        assert not np.array_equal(cold.scores, base.scores)  # operator moved
+        # delete: still bit-identical
+        idx.delete_rows([11])
+        cold2 = graph_lib.personalized_pagerank(idx, 5, tol=1e-5)
+        warm2 = graph_lib.personalized_pagerank(
+            idx, 5, tol=1e-5, warm_start=cold.scores
+        )
+        assert np.array_equal(cold2.scores, warm2.scores)
+        assert warm2.retraces == 0 and cold2.retraces == 0
+
+    def test_sharded_ppr_matches_single_device_bits(self):
+        csr = graph_lib.synthetic_graph_csr("er", 96, seed=3)
+        single = MutableTopKSpMVIndex(
+            csr, TopKSpMVConfig(k=8, num_partitions=4))
+        sh = ShardedTopKSpMVIndex(
+            csr, TopKSpMVConfig(k=8, num_partitions=2), mesh=None, n_shards=2)
+        a = graph_lib.personalized_pagerank(single, 5, tol=1e-5)
+        b = graph_lib.personalized_pagerank(sh, 5, tol=1e-5)
+        # canonicalized scores are a pure function of the operator: the
+        # partitioning/sharding of the device stage must not leak into them
+        assert np.array_equal(a.scores, b.scores)
+        assert b.retraces == 0
+
+    def test_top_nodes_ordering(self):
+        scores = np.asarray([0.1, 0.5, 0.5, 0.05], np.float32)
+        r = graph_lib.PPRResult(scores, 1, 0, 0.0, True, False, 0)
+        assert list(r.top_nodes(3)) == [1, 2, 0]  # ties -> lower id first
+
+
+# ---------------------------------------------------------------------------
+# top-k eigenpairs
+# ---------------------------------------------------------------------------
+
+
+EIG_FIXTURES = [("er", 64, 1), ("ba", 64, 2), ("ring", 48, 4)]
+
+
+class TestTopKEigen:
+    @pytest.mark.parametrize("kind,n,seed", EIG_FIXTURES)
+    def test_residuals_and_numpy_parity(self, kind, n, seed):
+        csr = graph_lib.synthetic_graph_csr(kind, n, seed=seed, symmetric=True)
+        idx = MutableTopKSpMVIndex(csr, TopKSpMVConfig(k=4, num_partitions=2))
+        res = graph_lib.topk_eigen(idx, 3, tol=1e-5, max_iters=3000)
+        assert res.converged and res.retraces == 0
+        dense = csr.to_dense().astype(np.float64)
+        for lam, v in zip(res.values, res.vectors.T):
+            resid = np.linalg.norm(dense @ v - lam * v)
+            assert resid <= 1e-4, (kind, lam, resid)
+        w_true = np.sort(np.linalg.eigvalsh(dense))[::-1][:3]
+        np.testing.assert_allclose(res.values, w_true, atol=1e-3)
+
+    def test_orthonormal_basis(self):
+        csr = graph_lib.synthetic_graph_csr("er", 64, seed=1, symmetric=True)
+        idx = MutableTopKSpMVIndex(csr, TopKSpMVConfig(k=4, num_partitions=2))
+        res = graph_lib.topk_eigen(idx, 3, tol=1e-5, max_iters=3000)
+        gram = res.vectors.T @ res.vectors
+        np.testing.assert_allclose(gram, np.eye(3), atol=1e-4)
+
+    def test_validation(self):
+        csr = graph_lib.synthetic_graph_csr("er", 32, seed=0, symmetric=True)
+        idx = MutableTopKSpMVIndex(csr, TopKSpMVConfig(k=4, num_partitions=2))
+        with pytest.raises(ValueError, match="eigenpairs"):
+            graph_lib.topk_eigen(idx, 0)
+
+
+# ---------------------------------------------------------------------------
+# zero-transfer / zero-retrace loops (structural)
+# ---------------------------------------------------------------------------
+
+
+class TestDeviceResidency:
+    def test_steady_state_spmv_zero_h2d_zero_retrace(self):
+        csr = graph_lib.synthetic_graph_csr("er", 96, seed=3)
+        cfg = TopKSpMVConfig(k=8, num_partitions=2)
+        idx = MutableTopKSpMVIndex(csr, cfg)
+        ex = query_executor(cfg)
+        a, b = jnp.float32(0.85), jnp.float32(0.15)
+        p = jnp.asarray(np.eye(96, dtype=np.float32)[5])
+        y = ex.spmv(p, idx.packed, alpha=a, beta=b, y=p, path="accumulate")
+        builds = ex.fn_builds
+        with jax.transfer_guard_host_to_device("disallow"):
+            for _ in range(10):
+                y = ex.spmv(y, idx.packed, alpha=a, beta=b, y=p,
+                            path="accumulate")
+            y.block_until_ready()
+        assert ex.fn_builds == builds, "accumulate loop retraced"
+
+    def test_ppr_guard_is_structural(self):
+        """guard_iterations=True (default) runs the loop under the H2D
+        disallow guard — reaching convergence proves zero transfers."""
+        csr = graph_lib.synthetic_graph_csr("ba", 72, seed=7)
+        idx = MutableTopKSpMVIndex(csr, TopKSpMVConfig(k=8, num_partitions=2))
+        res = graph_lib.personalized_pagerank(
+            idx, 3, tol=1e-5, guard_iterations=True
+        )
+        assert res.converged and res.retraces == 0
+
+
+# ---------------------------------------------------------------------------
+# merge-plane duplicate row ids (deflation restarts re-surface ids)
+# ---------------------------------------------------------------------------
+
+
+class TestMergeDuplicateRowIds:
+    def test_tree_equals_flat_with_duplicates(self):
+        """The same row id appearing in several pools (and twice in one
+        pool) must merge identically through any tree shape."""
+        vals = [
+            jnp.asarray([5.0, 3.0, 3.0, -1.0], jnp.float32),
+            jnp.asarray([5.0, 4.0, 3.0, 2.0], jnp.float32),
+            jnp.asarray([3.0, 3.0, 2.0, 2.0], jnp.float32),
+        ]
+        rows = [
+            jnp.asarray([7, 2, 2, 9], jnp.int32),
+            jnp.asarray([7, 1, 2, 9], jnp.int32),
+            jnp.asarray([2, 4, 9, 9], jnp.int32),
+        ]
+        flat = merge_topk(jnp.concatenate(vals), jnp.concatenate(rows),
+                          8, n_rows=16)
+        tree = tree_merge_topk(vals, rows, 8, n_rows=16)
+        assert np.array_equal(np.asarray(flat[0]), np.asarray(tree[0]))
+        assert np.array_equal(np.asarray(flat[1]), np.asarray(tree[1]))
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        pools=st.lists(
+            st.lists(
+                st.tuples(
+                    st.integers(min_value=-8, max_value=8),   # value bucket
+                    st.integers(min_value=0, max_value=11),   # row id (dupes!)
+                ),
+                min_size=1, max_size=6,
+            ),
+            min_size=1, max_size=5,
+        ),
+        big_k=st.integers(min_value=1, max_value=8),
+    )
+    def test_property_tree_equals_flat(self, pools, big_k):
+        n_rows = 12
+        vals = [
+            jnp.asarray([float(v) for v, _ in pool], jnp.float32)
+            for pool in pools
+        ]
+        rows = [
+            jnp.asarray([r for _, r in pool], jnp.int32) for pool in pools
+        ]
+        flat = merge_topk(jnp.concatenate(vals), jnp.concatenate(rows),
+                          big_k, n_rows=n_rows)
+        tree = tree_merge_topk(vals, rows, big_k, n_rows=n_rows)
+        assert np.array_equal(np.asarray(flat[0]), np.asarray(tree[0]))
+        assert np.array_equal(np.asarray(flat[1]), np.asarray(tree[1]))
+        # duplicates survive (merge dedups nothing): count preservation
+        fv, fr = np.asarray(flat[0]), np.asarray(flat[1])
+        allv = np.concatenate([np.asarray(v) for v in vals])
+        allr = np.concatenate([np.asarray(r) for r in rows])
+        order = np.lexsort((allr, -allv))
+        expect_r = allr[order][:big_k]
+        assert np.array_equal(fr[: len(expect_r)], expect_r)
+
+
+# ---------------------------------------------------------------------------
+# serving surface
+# ---------------------------------------------------------------------------
+
+
+class TestGraphRankingService:
+    def test_rank_warm_start_and_counters(self):
+        csr = graph_lib.synthetic_graph_csr("er", 96, seed=3)
+        idx = MutableTopKSpMVIndex(csr, TopKSpMVConfig(k=8, num_partitions=4))
+        svc = GraphRankingService(idx, tol=1e-5)
+        a = svc.rank(5, top_k=5)
+        assert not a.warm_started and svc.cold_solves == 1
+        assert a.node_ids[0] == 5  # the seed holds the most mass
+        # raw-index mutation path (replace_rows), then incremental re-rank
+        seg = csr.row_slice(9, 10)
+        svc.update_node(9, _dense_row(seg, 96))
+        b = svc.rank(5, top_k=5)
+        assert b.warm_started and svc.incremental_solves == 1
+        svc.forget(5)
+        c = svc.rank(5, top_k=5)
+        assert not c.warm_started
+        assert np.array_equal(b.result.scores, c.result.scores)
+        svc.delete_node(11)
+        d = svc.rank(5, top_k=5)
+        assert d.warm_started
+        info = svc.info()
+        assert info["cold_solves"] == 2 and info["incremental_solves"] == 2
+
+    def test_similarity_index_surface(self):
+        csr = graph_lib.synthetic_graph_csr("er", 64, seed=1)
+        from repro.core.similarity import SparseEmbeddingIndex
+        idx = SparseEmbeddingIndex(csr, TopKSpMVConfig(k=8, num_partitions=2))
+        res = idx.personalized_pagerank(3, tol=1e-5)
+        assert res.converged
+        scsr = graph_lib.synthetic_graph_csr("er", 64, seed=1, symmetric=True)
+        sidx = SparseEmbeddingIndex(
+            scsr, TopKSpMVConfig(k=8, num_partitions=2))
+        eig = sidx.topk_eigen(1, tol=1e-4, max_iters=2000)
+        assert eig.converged and abs(eig.values[0] - 1.0) < 1e-3
+
+
+def _dense_row(seg: bscsr.CSRMatrix, n_cols: int) -> np.ndarray:
+    out = np.zeros(n_cols, np.float32)
+    out[seg.indices] = seg.data * 1.05
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SPMD psum path on 8 forced host devices (slow subprocess, CI step)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+class TestSpmdAccumulateSubprocess:
+    CODE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np, jax.numpy as jnp
+from repro.core import graph as graph_lib
+from repro.core.sharded import ShardedTopKSpMVIndex
+from repro.core.topk_spmv import MutableTopKSpMVIndex, TopKSpMVConfig, query_executor
+from repro.launch.mesh import make_serving_mesh
+assert jax.device_count() == 8
+
+n = 128
+csr = graph_lib.synthetic_graph_csr("er", n, seed=3)
+cfg = TopKSpMVConfig(k=8, num_partitions=4, block_size=64)
+mesh = make_serving_mesh(n_shards=4, n_replicas=2)
+spmd = ShardedTopKSpMVIndex(csr, cfg, mesh=mesh)
+assert spmd.dispatch_info()["path"] == "spmd"
+local = ShardedTopKSpMVIndex(csr, cfg, mesh=None, n_shards=4)
+
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+y = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+
+# psum reduction bit-identical to the per-shard combine (same shard packing;
+# off-owner lanes are literal zeros, so reduction order cannot change bits)
+got = np.asarray(spmd.spmv(x, 0.7, 0.3, y))
+want = np.asarray(local.spmv(x, 0.7, 0.3, y))
+assert np.array_equal(got, want), np.abs(got - want).max()
+
+# steady state: zero retraces, zero H2D once operands are pre-replicated
+from jax.sharding import PartitionSpec
+disp = spmd._spmd
+xr = disp._place_x(x, PartitionSpec())
+ar, br, yr = disp._place_rep(0.7), disp._place_rep(0.3), disp._place_rep(y)
+spmd.spmv(xr, ar, br, yr).block_until_ready()  # warm the fn cache
+fn_builds = disp.fn_builds
+with jax.transfer_guard_host_to_device("disallow"):
+    for _ in range(5):
+        out = spmd.spmv(xr, ar, br, yr)
+    out.block_until_ready()
+assert disp.fn_builds == fn_builds
+
+# mutations flow through, PPR over the SPMD plane matches single-device bits
+single = MutableTopKSpMVIndex(csr, cfg)
+seg = csr.row_slice(5, 6)
+newvals = (seg.data * 1.02).astype(np.float32)
+spmd.replace_rows([5], [(seg.indices, newvals)])
+single.replace_rows([5], [(seg.indices, newvals)])
+a = graph_lib.personalized_pagerank(single, 3, tol=1e-5)
+b = graph_lib.personalized_pagerank(spmd, 3, tol=1e-5)
+assert np.array_equal(a.scores, b.scores)
+assert b.retraces == 0
+print("SPMD_ACCUM_OK")
+"""
+
+    def test_spmd_8dev(self):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(
+            os.path.dirname(__file__), "..", "src"
+        )
+        out = subprocess.run(
+            [sys.executable, "-c", self.CODE], env=env,
+            capture_output=True, text=True, timeout=600,
+        )
+        assert "SPMD_ACCUM_OK" in out.stdout, out.stderr[-3000:]
